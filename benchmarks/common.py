@@ -1,0 +1,58 @@
+"""Shared benchmark harness: the paper's two testbeds, model profiles, and
+CSV emission in the ``name,us_per_call,derived`` contract."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.core.types import GB, Gbps, ModelProfile, ServerSpec, SLO
+from repro.workloads.applications import APPLICATIONS, WARM, timings_for
+
+
+def testbed_i():
+    """(i) 4x A10 (1 GPU, 188 GB host) + 4x V100 (4 GPUs) @ 16 Gbps."""
+    servers = [ServerSpec(f"a10-{i}", 16 * Gbps, 12e9, 24 * GB, 1)
+               for i in range(4)]
+    servers += [ServerSpec(f"v100-{i}", 16 * Gbps, 12e9, 32 * GB, 4)
+                for i in range(4)]
+    return servers
+
+
+def testbed_ii():
+    """(ii) 2x A10 servers (4 GPUs, 64 Gbps) + 4x V100 (4 GPUs, 16 Gbps)."""
+    servers = [ServerSpec(f"a10-{i}", 64 * Gbps, 12e9, 24 * GB, 4)
+               for i in range(2)]
+    servers += [ServerSpec(f"v100-{i}", 16 * Gbps, 12e9, 32 * GB, 4)
+                for i in range(4)]
+    return servers
+
+
+def profiles():
+    return {name: ModelProfile(name, w.size_bytes, timings_for(name),
+                               SLO(7.5, 0.2))
+            for name, w in WARM.items()}
+
+
+class Bench:
+    """Collects (name, us_per_call, derived) rows and prints CSV."""
+
+    def __init__(self):
+        self.rows = []
+
+    def add(self, name: str, seconds: float, derived: str = ""):
+        self.rows.append((name, seconds * 1e6, derived))
+
+    def timeit(self, name: str, fn, repeat: int = 3, derived: str = ""):
+        best = float("inf")
+        for _ in range(repeat):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        self.add(name, best, derived)
+        return best
+
+    def emit(self, file=None):
+        file = file or sys.stdout
+        for name, us, derived in self.rows:
+            print(f"{name},{us:.1f},{derived}", file=file)

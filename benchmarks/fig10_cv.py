@@ -1,0 +1,49 @@
+"""Fig. 10 — TTFT SLO attainment vs request rate at several CVs, for
+serverless vLLM / ServerlessLLM / HydraServe (+cache)."""
+
+from __future__ import annotations
+
+from benchmarks.common import Bench, profiles, testbed_i
+from repro.serving.simulation import ServerlessSim
+from repro.workloads.applications import APPLICATIONS
+from repro.workloads.generator import generate, make_instances
+
+SYSTEMS = [
+    ("vllm", {}),
+    ("serverlessllm", {}),
+    ("hydra", {}),
+    ("hydra+cache", {"cache_enabled": True}),
+]
+
+
+def attainment(system_kw, cv: float, rps: float, seed: int = 0,
+               n_per_app: int = 64, duration: float = 600.0):
+    system = system_kw[0].split("+")[0]
+    insts = make_instances(APPLICATIONS, n_per_app)
+    sim = ServerlessSim(testbed_i(), profiles(), insts, system=system,
+                        **system_kw[1])
+    reqs = generate(insts, rps=rps, cv=cv, duration=duration, seed=seed)
+    sim.submit(reqs)
+    sim.run(until=duration * 6)
+    return sim.metrics()
+
+
+def run(bench: Bench, cvs=(2.0, 8.0), rates=(0.2, 0.6, 1.0)):
+    for cv in cvs:
+        for rps in rates:
+            for name, kw in SYSTEMS:
+                m = attainment((name, kw), cv, rps)
+                bench.add(
+                    f"fig10/cv{cv:g}/rps{rps:g}/{name}", m["ttft_mean"],
+                    f"ttft_att={m['ttft_attainment']:.3f};"
+                    f"tpot_att={m['tpot_attainment']:.3f};n={m['n']}")
+
+
+def main():
+    b = Bench()
+    run(b)
+    b.emit()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Fig. 11 — TTFT SLO attainment under scaled SLOs (tight ... loose),
+CV fixed at 8."""
+
+from __future__ import annotations
+
+from benchmarks.common import Bench, profiles, testbed_i
+from repro.serving.simulation import ServerlessSim
+from repro.workloads.applications import APPLICATIONS
+from repro.workloads.generator import generate, make_instances
+
+SYSTEMS = [("vllm", {}), ("serverlessllm", {}), ("hydra", {}),
+           ("hydra+cache", {"cache_enabled": True})]
+
+
+def run(bench: Bench, scales=(0.5, 1.0, 2.0), rps: float = 0.6,
+        cv: float = 8.0):
+    for scale in scales:
+        for name, kw in SYSTEMS:
+            insts = make_instances(APPLICATIONS, 64, slo_scale=scale)
+            sim = ServerlessSim(testbed_i(), profiles(), insts,
+                                system=name.split("+")[0], **kw)
+            reqs = generate(insts, rps=rps, cv=cv, duration=600, seed=1)
+            sim.submit(reqs)
+            sim.run(until=3600)
+            m = sim.metrics()
+            bench.add(f"fig11/slo{scale:g}x/{name}", m["ttft_mean"],
+                      f"ttft_att={m['ttft_attainment']:.3f};"
+                      f"tpot_att={m['tpot_attainment']:.3f}")
+
+
+def main():
+    b = Bench()
+    run(b)
+    b.emit()
+
+
+if __name__ == "__main__":
+    main()

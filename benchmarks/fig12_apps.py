@@ -1,0 +1,38 @@
+"""Fig. 12 — per-application TTFT SLO attainment (chat / code /
+summarization) at CV=8, RPS=0.6."""
+
+from __future__ import annotations
+
+import collections
+
+from benchmarks.common import Bench, profiles, testbed_i
+from repro.serving.simulation import ServerlessSim
+from repro.workloads.applications import APPLICATIONS
+from repro.workloads.generator import generate, make_instances
+
+
+def run(bench: Bench, rps: float = 0.6, cv: float = 8.0):
+    for system in ("vllm", "serverlessllm", "hydra"):
+        insts = make_instances(APPLICATIONS, 64)
+        sim = ServerlessSim(testbed_i(), profiles(), insts, system=system)
+        reqs = generate(insts, rps=rps, cv=cv, duration=600, seed=2)
+        sim.submit(reqs)
+        sim.run(until=3600)
+        per_app = collections.defaultdict(list)
+        for r in sim.finished:
+            per_app[r.app.split("-")[0]].append(r)
+        for app, rs in sorted(per_app.items()):
+            att = sum(1 for r in rs if r.ttft_ok()) / len(rs)
+            mean = sum(r.ttft for r in rs) / len(rs)
+            bench.add(f"fig12/{app}/{system}", mean,
+                      f"ttft_att={att:.3f};n={len(rs)}")
+
+
+def main():
+    b = Bench()
+    run(b)
+    b.emit()
+
+
+if __name__ == "__main__":
+    main()

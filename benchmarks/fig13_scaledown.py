@@ -1,0 +1,45 @@
+"""Fig. 13 — total tokens generated over time for one cold request with and
+without scale-down consolidation (Llama2-13B, 512 in / 512 out)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import Bench, profiles, testbed_i
+from repro.serving.simulation import ServerlessSim
+from repro.workloads.applications import APPLICATIONS
+from repro.workloads.generator import ModelInstance, Request
+
+
+def one_request(consolidate: bool):
+    inst = ModelInstance("fig13#0", "chatbot-13b", "llama2-13b",
+                         slo_ttft=1e9, slo_tpot=1e9,
+                         mean_prompt=512, mean_output=512)
+    sim = ServerlessSim(testbed_i(), profiles(), [inst], system="hydra",
+                        force_s=4, consolidate=consolidate)
+    req = Request(0, inst.name, inst.app, 0.0, 512, 512, 1e9, 1e9)
+    sim.submit([req])
+    sim.run(until=1200)
+    return req
+
+
+def run(bench: Bench):
+    base = one_request(consolidate=False)
+    cons = one_request(consolidate=True)
+    e2e_base = base.completion - base.arrival
+    e2e_cons = cons.completion - cons.arrival
+    bench.add("fig13/pipeline-only/e2e", e2e_base,
+              f"ttft={base.ttft:.2f}s;tpot={base.tpot*1e3:.0f}ms")
+    bench.add("fig13/scale-down/e2e", e2e_cons,
+              f"ttft={cons.ttft:.2f}s;tpot={cons.tpot*1e3:.0f}ms;"
+              f"speedup={e2e_base/e2e_cons:.2f}x")
+
+
+def main():
+    b = Bench()
+    run(b)
+    b.emit()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Fig. 14 — bursty load: average TTFT / TPOT for different pipeline group
+sizes when N concurrent requests hit one cold model (Llama2-13B on V100s,
+max batch 8)."""
+
+from __future__ import annotations
+
+from benchmarks.common import Bench, profiles, testbed_i
+from repro.serving.simulation import ServerlessSim
+from repro.workloads.generator import ModelInstance, burst
+
+
+def burst_run(n_requests: int, group_s: int):
+    # TPOT SLO forces full-memory pipeline workers (paper Fig.14b: TPOT
+    # overhead only 1.08-1.19x => their groups are full-memory)
+    inst = ModelInstance("fig14#0", "chatbot-13b", "llama2-13b",
+                         slo_ttft=1e6, slo_tpot=0.12,
+                         mean_prompt=512, mean_output=512)
+    sim = ServerlessSim(testbed_i(), profiles(), [inst], system="hydra",
+                        force_s=group_s, consolidate=True)
+    reqs = burst(inst, n_requests)
+    sim.submit(reqs)
+    sim.run(until=3600)
+    done = [r for r in reqs if r.completion is not None]
+    ttft = sum(r.ttft for r in done) / len(done)
+    tpot = sum(r.tpot for r in done) / len(done)
+    return ttft, tpot, len(done)
+
+
+def run(bench: Bench, loads=(16, 64, 128)):
+    for n in loads:
+        base = None
+        for s in (1, 2, 4):
+            ttft, tpot, n_done = burst_run(n, s)
+            derived = f"tpot={tpot*1e3:.0f}ms;done={n_done}"
+            if s == 1:
+                base = ttft
+            else:
+                derived += f";ttft_speedup={base/ttft:.2f}x"
+            bench.add(f"fig14/burst{n}/s{s}", ttft, derived)
+
+
+def main():
+    b = Bench()
+    run(b)
+    b.emit()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Fig. 8 — cold-start TTFT per system per model (single request, idle
+cluster). Also covers Table-1-style derived ratios vs serverless vLLM."""
+
+from __future__ import annotations
+
+from benchmarks.common import Bench, profiles, testbed_i
+from repro.serving.simulation import ServerlessSim
+from repro.workloads.generator import ModelInstance, burst
+
+
+def single_cold_ttft(system: str, model: str, **kw) -> float:
+    inst = ModelInstance(f"{model}#0", "chatbot", model,
+                         slo_ttft=1e6, slo_tpot=1e6,   # no SLO pressure
+                         mean_prompt=315, mean_output=240)
+    sim = ServerlessSim(testbed_i(), profiles(), [inst], system=system, **kw)
+    reqs = burst(inst, 1)
+    sim.submit(reqs)
+    sim.run(until=600)
+    return reqs[0].ttft
+
+
+def run(bench: Bench):
+    for model in ("llama2-7b", "llama2-13b", "opt-6.7b"):
+        base = single_cold_ttft("vllm", model)
+        bench.add(f"fig8/{model}/serverless-vllm", base)
+        sllm = single_cold_ttft("serverlessllm", model)
+        bench.add(f"fig8/{model}/serverlessllm", sllm,
+                  f"speedup={base/sllm:.2f}x")
+        h1 = single_cold_ttft("hydra", model, force_s=1)
+        bench.add(f"fig8/{model}/hydra-s1", h1, f"speedup={base/h1:.2f}x")
+        h4 = single_cold_ttft("hydra", model, force_s=4)
+        bench.add(f"fig8/{model}/hydra-s4", h4, f"speedup={base/h4:.2f}x")
+
+
+def main():
+    b = Bench()
+    run(b)
+    b.emit()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Fig. 9 — incremental technique breakdown: vLLM baseline, +Prefetch,
++Stream, +Overlap, +Parallel (the paper's ablation, under 2-way NIC
+contention where overlap matters most)."""
+
+from __future__ import annotations
+
+from benchmarks.common import Bench, profiles, testbed_i
+from repro.core.coldstart import OverlapFlags
+from repro.serving.simulation import ServerlessSim
+from repro.workloads.applications import APPLICATIONS
+from repro.workloads.generator import burst, make_instances
+
+STEPS = [
+    ("vllm", dict(system="vllm")),
+    ("+prefetch", dict(system="hydra", force_s=1,
+                       flags=OverlapFlags(True, False, False),
+                       consolidate=False)),
+    ("+stream", dict(system="hydra", force_s=1,
+                     flags=OverlapFlags(True, True, False),
+                     consolidate=False)),
+    ("+overlap", dict(system="hydra", force_s=1,
+                      flags=OverlapFlags(True, True, True),
+                      consolidate=False)),
+    ("+parallel", dict(system="hydra", force_s=4,
+                       flags=OverlapFlags(True, True, True),
+                       consolidate=False)),
+]
+
+
+def run(bench: Bench, model: str = "llama2-13b"):
+    apps = [a for a in APPLICATIONS if a.model == model]
+    prev = None
+    for name, kw in STEPS:
+        # two concurrent cold starts of different models on a small cluster
+        # to exercise NIC contention (paper's production motivation)
+        insts = make_instances(apps[:1], 2, slo_scale=100.0)
+        sim = ServerlessSim(testbed_i(), profiles(), insts, **kw)
+        reqs = burst(insts[0], 1) + [
+            r for r in burst(insts[1], 1)]
+        for i, r in enumerate(reqs):
+            r.req_id = i
+        sim.submit(reqs)
+        sim.run(until=600)
+        ttft = max(r.ttft for r in reqs)
+        derived = "" if prev is None else f"delta={prev-ttft:+.2f}s"
+        bench.add(f"fig9/{model}/{name}", ttft, derived)
+        prev = ttft
+
+
+def main():
+    b = Bench()
+    run(b)
+    b.emit()
+
+
+if __name__ == "__main__":
+    main()

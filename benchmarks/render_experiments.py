@@ -1,0 +1,106 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
+JSONL records.
+
+    PYTHONPATH=src python -m benchmarks.render_experiments
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+MOVE_HINT = {
+    ("compute", "train"): "fewer recompute passes (selective remat) and "
+    "causal-skip attention would cut compute directly",
+    ("compute", "prefill"): "causal-skip blocked attention halves the "
+    "dominant score-matmul FLOPs",
+    ("memory", "decode"): "KV-cache layout/quantization (int8 KV) or larger "
+    "decode batch amortizes the weight+cache stream",
+    ("memory", "train"): "activation re-layout to cut copies",
+    ("memory", "prefill"): "fuse cache writes",
+    ("collective", "train"): "overlap gradient reduce-scatter with backward "
+    "compute; bf16 grads already halve volume",
+    ("collective", "decode"): "move the per-layer TP all-reduce to "
+    "reduce-scatter on the residual stream",
+    ("collective", "prefill"): "sequence-parallel boundary collectives "
+    "already minimal; overlap with compute",
+}
+
+
+def load(mesh: str, policy: str = "baseline"):
+    path = os.path.join(DRYRUN_DIR, f"{mesh}_{policy}.jsonl")
+    rows = {}
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if r.get("ok"):
+                rows[(r["arch"], r["shape"])] = r
+    return rows
+
+
+def shape_kind(shape: str) -> str:
+    return {"train_4k": "train", "prefill_32k": "prefill",
+            "decode_32k": "decode", "long_500k": "decode"}[shape]
+
+
+def render_roofline(rows) -> str:
+    out = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | MODEL_FLOPS | useful ratio | roofline frac | "
+           "mem/dev (GiB) |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape), r in sorted(rows.items()):
+        out.append(
+            f"| {arch} | {shape} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"**{r['dominant']}** | {r['model_flops']:.3g} | "
+            f"{r['useful_ratio']:.3f} | {r['roofline_fraction']:.3f} | "
+            f"{r['peak_mem_gb']:.1f} |")
+    return "\n".join(out)
+
+
+def render_dryrun(rows, mesh) -> str:
+    out = [f"### Mesh {mesh}",
+           "",
+           "| arch | shape | args bytes/dev | temp bytes/dev | "
+           "collective bytes/dev (parsed HLO) | compile (s) |",
+           "|---|---|---|---|---|---|"]
+    for (arch, shape), r in sorted(rows.items()):
+        coll = sum(r["coll_bytes"].values())
+        out.append(
+            f"| {arch} | {shape} | {r.get('arg_bytes', 0):,} | "
+            f"{r.get('temp_bytes', 0):,} | {coll:,} | "
+            f"{r.get('compile_s', 0):.1f} |")
+    return "\n".join(out)
+
+
+def render_hints(rows) -> str:
+    out = []
+    for (arch, shape), r in sorted(rows.items()):
+        hint = MOVE_HINT.get((r["dominant"], shape_kind(shape)), "")
+        out.append(f"- **{arch} × {shape}** ({r['dominant']}-bound): {hint}")
+    return "\n".join(out)
+
+
+def main():
+    single = load("16x16")
+    multi = load("2x16x16")
+    print("## §Dry-run\n")
+    print(f"Single-pod cells: {len(single)}/32 OK; "
+          f"multi-pod cells: {len(multi)}/32 OK\n")
+    print(render_dryrun(single, "16x16 (256 chips)"))
+    print()
+    print(render_dryrun(multi, "2x16x16 (512 chips)"))
+    print("\n## §Roofline (single-pod 16x16, baseline policy)\n")
+    print(render_roofline(single))
+    print("\n### What moves the dominant term\n")
+    print(render_hints(single))
+
+
+if __name__ == "__main__":
+    main()

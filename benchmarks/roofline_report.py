@@ -1,0 +1,47 @@
+"""§Roofline report — reads the dry-run JSONL records and emits the
+per-(arch x shape x mesh) roofline table rows as bench CSV."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Bench
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def run(bench: Bench):
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.jsonl")))
+    if not files:
+        bench.add("roofline/no-dryrun-records", 0.0,
+                  "run: python -m repro.launch.dryrun --all")
+        return
+    seen = {}
+    for path in files:
+        with open(path) as f:
+            for line in f:
+                r = json.loads(line)
+                if not r.get("ok"):
+                    continue
+                seen[(r["arch"], r["shape"], r["mesh"], r["policy"])] = r
+    for (arch, shape, mesh, policy), r in sorted(seen.items()):
+        bench.add(
+            f"roofline/{mesh}/{policy}/{arch}/{shape}",
+            r["compute_s"],
+            f"dom={r['dominant']};mem_s={r['memory_s']:.4f};"
+            f"coll_s={r['collective_s']:.4f};"
+            f"frac={r['roofline_fraction']:.3f};"
+            f"mem_gb={r['peak_mem_gb']:.1f}")
+
+
+def main():
+    b = Bench()
+    run(b)
+    b.emit()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Fault-tolerant checkpointing: atomic commit (write temp dir + manifest +
+rename), keep-last-k retention, restore-latest. Pytree leaves are stored as
+individual .npy files keyed by their tree path."""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # --------------------------------------------------------------- save
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        leaves = _flatten_with_paths(tree)
+        tmp = tempfile.mkdtemp(dir=self.dir, prefix=".tmp-")
+        manifest = {"step": int(step), "leaves": [], "extra": extra or {}}
+        try:
+            for key, leaf in leaves.items():
+                arr = np.asarray(leaf)
+                fname = key.replace("/", "__") + ".npy"
+                np.save(os.path.join(tmp, fname), arr)
+                manifest["leaves"].append(
+                    {"key": key, "file": fname, "dtype": str(arr.dtype),
+                     "shape": list(arr.shape)})
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            final = os.path.join(self.dir, f"step_{step:010d}")
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)        # atomic commit
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                # only committed checkpoints (manifest present) count
+                if os.path.exists(os.path.join(self.dir, name,
+                                               "manifest.json")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None):
+        """Restore into the structure of `template` (values replaced)."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                return None, None
+        d = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        by_key = {e["key"]: e for e in manifest["leaves"]}
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for path, leaf in flat:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            entry = by_key[key]
+            arr = np.load(os.path.join(d, entry["file"]))
+            leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype)
+                          if hasattr(leaf, "dtype") else arr)
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        return tree, manifest

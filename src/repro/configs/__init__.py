@@ -1,0 +1,40 @@
+"""Architecture configs. ``load_all()`` imports every arch module so that
+``get_config(name)`` can resolve by name."""
+
+import importlib
+
+_ARCH_MODULES = [
+    "granite_3_8b",
+    "internlm2_20b",
+    "starcoder2_7b",
+    "qwen1_5_32b",
+    "qwen2_moe_a2_7b",
+    "grok_1_314b",
+    "llava_next_34b",
+    "whisper_small",
+    "jamba_v0_1_52b",
+    "rwkv6_1_6b",
+    "paper_models",
+]
+
+_loaded = False
+
+
+def load_all():
+    global _loaded
+    if _loaded:
+        return
+    for m in _ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+    _loaded = True
+
+
+from repro.configs.base import (  # noqa: E402,F401
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    applicable_shapes,
+    get_config,
+    list_configs,
+    smoke_variant,
+)

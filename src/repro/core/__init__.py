@@ -1,0 +1,15 @@
+"""The paper's primary contribution: pipeline-parallel cold starts
+(Alg. 1 size selection, Alg. 2 contention-aware placement, worker-level
+overlapping, pipeline consolidation)."""
+
+from repro.core.coldstart import (OverlapFlags, group_tpot, group_ttft,  # noqa: F401
+                                  worker_timeline)
+from repro.core.consolidation import (ConsolidationPlan,  # noqa: F401
+                                      ConsolidationPolicy,
+                                      SlidingWindowPredictor)
+from repro.core.controller import CentralController  # noqa: F401
+from repro.core.parallelism import (predict_tpot, predict_ttft,  # noqa: F401
+                                    predict_ttft_overlapped, select_scheme)
+from repro.core.placement import ContentionTracker  # noqa: F401
+from repro.core.types import (GB, Gbps, ColdStartScheme,  # noqa: F401
+                              ModelProfile, ServerSpec, SLO, TimingProfile)

@@ -1,0 +1,85 @@
+"""Cluster-level central controller: glues Algorithm 1 (parallelism size
+selection), Algorithm 2 (contention tracking) and the consolidation policy.
+Used by both the discrete-event serving simulation and the real JAX engine.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+from repro.core.consolidation import (ConsolidationPolicy,
+                                      SlidingWindowPredictor)
+from repro.core.parallelism import predict_tpot, select_scheme
+from repro.core.placement import ContentionTracker
+from repro.core.types import ColdStartScheme, ModelProfile, ServerSpec, SLO
+
+
+class CentralController:
+    def __init__(self, servers: Dict[str, ServerSpec],
+                 window_s: float = 60.0, per_worker_capacity: int = 8,
+                 overlapped: bool = True, max_pp_cap: Optional[int] = None):
+        self.servers = servers
+        self.tracker = ContentionTracker(servers)
+        self.predictor = SlidingWindowPredictor(window_s)
+        self.consolidation = ConsolidationPolicy(self.predictor,
+                                                 per_worker_capacity)
+        self.overlapped = overlapped
+        self.max_pp_cap = max_pp_cap
+        self.models: Dict[str, ModelProfile] = {}
+
+    # ------------------------------------------------------------ registry
+    def register_model(self, profile: ModelProfile):
+        self.models[profile.name] = profile
+
+    def record_request(self, model: str, now: float):
+        self.predictor.record(model, now)
+
+    # ------------------------------------------------------- cold starts
+    def plan_cold_start(self, model_name: str, free_hbm: Dict[str, int],
+                        now: float, queue_wait: float = 0.0,
+                        force_s: Optional[int] = None) -> ColdStartScheme:
+        model = self.models[model_name]
+        if self.max_pp_cap is not None:
+            import dataclasses
+            model = dataclasses.replace(
+                model, max_pp=min(model.max_pp, self.max_pp_cap))
+        eff = self.tracker.effective_bandwidths(now)
+        return select_scheme(model, self.servers, free_hbm, eff,
+                             t_w=queue_wait, overlapped=self.overlapped,
+                             fixed_s=force_s)
+
+    def fetch_deadline(self, model_name: str, scheme: ColdStartScheme,
+                       now: float) -> float:
+        """Alg.2: D_i from the TTFT SLO — fetch must complete early enough
+        to leave room for the prefill chain (+ load slack when not
+        overlapped)."""
+        model = self.models[model_name]
+        t = model.timings
+        post = t.t_p * (scheme.s - scheme.w + scheme.w / scheme.s) \
+            + t.t_n * scheme.s
+        d = now + model.slo.ttft - post
+        # never earlier than the uncontended fetch itself
+        min_fetch = min(
+            (model.size_bytes / scheme.s) / self.servers[sid].nic_bytes_per_s
+            for sid in scheme.servers)
+        return max(d, now + min_fetch)
+
+    def admit_fetches(self, model_name: str, scheme: ColdStartScheme,
+                      worker_ids, stage_bytes, now: float) -> float:
+        """Register each stage fetch with the contention tracker; returns
+        the common deadline."""
+        deadline = self.fetch_deadline(model_name, scheme, now)
+        for sid, wid, nbytes in zip(scheme.servers, worker_ids, stage_bytes):
+            self.tracker.admit(sid, wid, nbytes, deadline, now)
+        return deadline
+
+    def fetch_complete(self, server_id: str, worker_id: str, now: float):
+        self.tracker.complete(server_id, worker_id, now)
+
+    # --------------------------------------------------------- autoscaling
+    def consolidation_plan(self, model_name: str, queue_len: int, now: float,
+                           current_workers: int):
+        model = self.models[model_name]
+        return self.consolidation.plan(model_name, queue_len, now,
+                                       model.max_pp, current_workers)

@@ -1,0 +1,90 @@
+"""Algorithm 2 — network-contention-aware worker placement.
+
+Per server the tracker keeps the in-flight cold-start fetches (deadline D_i,
+pending bytes S_i).  Admission check (Eq. 3): with N residents and one
+candidate, every resident must still finish under fair share B/(N+1).
+Pending bytes are re-estimated lazily on every bandwidth-changing event
+(Eq. 4): S_i' = S_i - B/N * (T - T').
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.types import ColdWorkerRecord, ServerSpec
+
+
+@dataclass
+class _NodeState:
+    spec: ServerSpec
+    workers: Dict[str, ColdWorkerRecord] = field(default_factory=dict)
+    last_change: float = 0.0
+
+
+class ContentionTracker:
+    """Cluster-level bookkeeping behind GETNODEBANDWIDTH /
+    HANDLEBANDWIDTHCHANGE in the paper's Algorithm 2."""
+
+    def __init__(self, servers: Dict[str, ServerSpec]):
+        self._nodes = {sid: _NodeState(spec) for sid, spec in servers.items()}
+
+    # ----------------------------------------------------------- internals
+    def _settle(self, node: _NodeState, now: float):
+        """Eq. 4: advance pending sizes to `now` under the old fair share."""
+        n = len(node.workers)
+        if n:
+            share = node.spec.nic_bytes_per_s / n
+            elapsed = max(0.0, now - node.last_change)
+            done = []
+            for w in node.workers.values():
+                w.pending_bytes -= share * elapsed
+                if w.pending_bytes <= 0:
+                    done.append(w.worker_id)
+            for wid in done:
+                del node.workers[wid]
+        node.last_change = now
+
+    # ------------------------------------------------------------- queries
+    def node_bandwidth(self, server_id: str, now: float) -> float:
+        """Effective NIC share a NEW cold-start worker would get on this
+        server right now; 0 if admitting it would break Eq. 3 for any
+        resident fetch. (Paper's GETNODEBANDWIDTH returns B/N which is
+        undefined at N=0 and optimistic otherwise; we return B/(N+1),
+        consistent with the Eq. 3 check — noted in DESIGN.md §9.)"""
+        node = self._nodes[server_id]
+        self._settle(node, now)
+        b = node.spec.nic_bytes_per_s
+        n = len(node.workers)
+        share_after = b / (n + 1)
+        for w in node.workers.values():
+            if w.pending_bytes > share_after * (w.deadline - now):
+                return 0.0
+        return share_after
+
+    def effective_bandwidths(self, now: float) -> Dict[str, float]:
+        return {sid: self.node_bandwidth(sid, now) for sid in self._nodes}
+
+    def residents(self, server_id: str) -> List[ColdWorkerRecord]:
+        return list(self._nodes[server_id].workers.values())
+
+    # ------------------------------------------------------------ mutation
+    def admit(self, server_id: str, worker_id: str, fetch_bytes: float,
+              deadline: float, now: float):
+        node = self._nodes[server_id]
+        self._settle(node, now)
+        node.workers[worker_id] = ColdWorkerRecord(worker_id, deadline,
+                                                   float(fetch_bytes))
+
+    def complete(self, server_id: str, worker_id: str, now: float):
+        """Fetch finished (or worker aborted) — a bandwidth change event."""
+        node = self._nodes[server_id]
+        self._settle(node, now)
+        node.workers.pop(worker_id, None)
+
+    def fair_share(self, server_id: str, now: float) -> float:
+        """Current fair share among residents (simulation ground truth)."""
+        node = self._nodes[server_id]
+        self._settle(node, now)
+        n = max(len(node.workers), 1)
+        return node.spec.nic_bytes_per_s / n

@@ -1,0 +1,220 @@
+"""Manual-collective tensor parallelism via shard_map (§Perf it.6).
+
+GSPMD's CPU pipeline reduces TP partial sums in f32 (double volume) and
+never rewrites all-reduce -> reduce-scatter under sequence parallelism
+(measured in EXPERIMENTS.md §Perf). This module hand-schedules the
+Megatron-SP collective pattern for dense GQA prefill:
+
+  per sublayer:  x_seqshard --all_gather(bf16)--> x_full
+                 local heads compute
+                 partial out --psum_scatter(bf16)--> y_seqshard
+
+One bf16 all-gather + one bf16 reduce-scatter per sublayer — vs GSPMD's
+f32 all-gather + f32 all-reduce. KV heads (< TP) are computed replicated
+per rank from an all-gathered w_k/w_v (weights are small); q heads are
+TP-local (requires n_heads % tp == 0).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models.common import rmsnorm
+
+
+def supports(cfg: ModelConfig, tp: int = 16) -> bool:
+    return (not cfg.is_moe and not cfg.is_encdec and not cfg.sub_quadratic
+            and cfg.n_heads % tp == 0 and cfg.pos_embed == "rope"
+            and cfg.d_model % tp == 0 and cfg.d_ff % tp == 0)
+
+
+def _param_specs(cfg: ModelConfig) -> dict:
+    """Physical specs matching models' ParamDef axes on (data, model)."""
+    d = {
+        "embed": {"tok": P("model", None)},
+        "blocks": {"slot00": {
+            "mixer": {
+                "w_q": P(None, None, "model"),
+                "w_k": P(None, None, "model"),
+                "w_v": P(None, None, "model"),
+                "w_o": P(None, "model", None),
+                "norm": P(None, None),
+            },
+            "mlp": {
+                "w_gate": P(None, None, "model"),
+                "w_up": P(None, None, "model"),
+                "w_down": P(None, "model", None),
+                "norm": P(None, None),
+            },
+        }},
+        "final_norm": P(None),
+        "lm_head": P(None, "model"),
+    }
+    if cfg.qkv_bias:
+        d["blocks"]["slot00"]["mixer"].update({
+            "b_q": P(None, "model"), "b_k": P(None, "model"),
+            "b_v": P(None, "model")})
+    return d
+
+
+def make_manual_prefill(cfg: ModelConfig, mesh, batch: int, seq: int,
+                        tp: int = 16):
+    """Returns (fn, arg_structs, in_shardings, out_shardings, donate)."""
+    assert supports(cfg, tp), cfg.name
+    from jax.sharding import NamedSharding
+
+    cdt = jnp.dtype(cfg.dtype)
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    hq_loc = hq // tp
+    d, ff = cfg.d_model, cfg.d_ff
+    n_layers = cfg.n_periods
+    s_loc = seq // tp
+
+    def step(params, tokens):
+        # --- manual region: everything below sees per-'model'-rank shards,
+        # 'data' stays automatic (GSPMD) ------------------------------------
+        rank = jax.lax.axis_index("model")
+
+        # embedding: local vocab shard + one bf16 psum
+        vshard = cfg.padded_vocab // tp
+        tok_w = params["embed"]["tok"]              # (V/tp, d) local
+        local_ids = tokens - rank * vshard
+        in_range = (local_ids >= 0) & (local_ids < vshard)
+        x = jnp.take(tok_w, jnp.clip(local_ids, 0, vshard - 1), axis=0)
+        x = jnp.where(in_range[..., None], x, 0).astype(jnp.float32)
+        # NOTE: XLA:CPU's AllReducePromotion pass crashes on sub-f32
+        # reduce collectives (see EXPERIMENTS.md §Perf it.6) — reduce in
+        # f32, cast after. all_gathers stay bf16 (no arithmetic, no pass).
+        x = jax.lax.psum(x, "model").astype(cdt)  # (B, S, d)
+        # sequence-shard the residual stream
+        x = jax.lax.dynamic_slice_in_dim(x, rank * s_loc, s_loc, 1)
+
+        positions = jnp.broadcast_to(jnp.arange(seq)[None],
+                                     (tokens.shape[0], seq))
+
+        def layer(x, pslice):
+            mixer, mlp = pslice["mixer"], pslice["mlp"]
+            # ---- attention sublayer
+            xin = rmsnorm(x, mixer["norm"], cfg.norm_eps)
+            x_full = jax.lax.all_gather(xin, "model", axis=1, tiled=True)
+            q = jnp.einsum("bsd,dh->bsh", x_full,
+                           mixer["w_q"].astype(x.dtype))
+            if cfg.qkv_bias:
+                q = q + mixer["b_q"].astype(x.dtype)
+            b = q.shape[0]
+            q = q.reshape(b, seq, hq_loc, hd)
+            # kv: replicate heads per rank (w_k/w_v shards all-gathered —
+            # weights are tiny next to activations)
+            w_k = jax.lax.all_gather(mixer["w_k"], "model", axis=1,
+                                     tiled=True)
+            w_v = jax.lax.all_gather(mixer["w_v"], "model", axis=1,
+                                     tiled=True)
+            k = jnp.einsum("bsd,dh->bsh", x_full, w_k.astype(x.dtype))
+            v = jnp.einsum("bsd,dh->bsh", x_full, w_v.astype(x.dtype))
+            if cfg.qkv_bias:
+                k = k + jax.lax.all_gather(mixer["b_k"], "model",
+                                           tiled=True).astype(x.dtype)
+                v = v + jax.lax.all_gather(mixer["b_v"], "model",
+                                           tiled=True).astype(x.dtype)
+            k = k.reshape(b, seq, hkv, hd)
+            v = v.reshape(b, seq, hkv, hd)
+            from repro.models.common import apply_rope
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            # GQA: select each local q head's kv head from the replicated set
+            group = hq // hkv
+            q_global = rank * hq_loc + jnp.arange(hq_loc)
+            kv_sel = q_global // group
+            k_sel = jnp.take(k, kv_sel, axis=2)
+            v_sel = jnp.take(v, kv_sel, axis=2)
+            out = ops.flash_attention(q, k_sel, v_sel, causal=True)
+            y = jnp.einsum("bsh,hd->bsd", out.reshape(b, seq, hq_loc * hd),
+                           mixer["w_o"].astype(x.dtype))
+            # ONE bf16 reduce-scatter back to the seq shard
+            y = jax.lax.psum_scatter(y.astype(jnp.float32), "model",
+                                     scatter_dimension=1, tiled=True)
+            x = x + y.astype(x.dtype)
+            # ---- mlp sublayer
+            xin = rmsnorm(x, mlp["norm"], cfg.norm_eps)
+            x_full = jax.lax.all_gather(xin, "model", axis=1, tiled=True)
+            g = jnp.einsum("bsd,df->bsf", x_full,
+                           mlp["w_gate"].astype(x.dtype))
+            u = jnp.einsum("bsd,df->bsf", x_full,
+                           mlp["w_up"].astype(x.dtype))
+            h = jax.nn.silu(g) * u
+            y = jnp.einsum("bsf,fd->bsd", h, mlp["w_down"].astype(x.dtype))
+            y = jax.lax.psum_scatter(y.astype(jnp.float32), "model",
+                                     scatter_dimension=1, tiled=True)
+            x = x + y.astype(x.dtype)
+            # cache slices: this rank keeps its kv_seq shard
+            k_sh = jax.lax.dynamic_slice_in_dim(k, rank * s_loc, s_loc, 1)
+            v_sh = jax.lax.dynamic_slice_in_dim(v, rank * s_loc, s_loc, 1)
+            return x, {"k": k_sh, "v": v_sh}
+
+        x, cache = jax.lax.scan(
+            lambda c, p: layer(c, p), x, params["blocks"]["slot00"])
+
+        # head on the final token (lives on the last rank's shard)
+        x_full = jax.lax.all_gather(
+            rmsnorm(x, params["final_norm"], cfg.norm_eps),
+            "model", axis=1, tiled=True)
+        last = x_full[:, -1]
+        logits = jnp.einsum("bd,dv->bv", last,
+                            params["lm_head"].astype(last.dtype))
+        return logits, cache
+
+    pspecs = _param_specs(cfg)
+    tok_spec = P(("pod", "data"), None)
+    logits_spec = P(("pod", "data"), "model")
+    cache_spec = {"k": P(None, ("pod", "data"), "model", None, None),
+                  "v": P(None, ("pod", "data"), "model", None, None)}
+
+    def drop_pod(spec):
+        if "pod" in mesh.axis_names:
+            return spec
+        parts = []
+        for part in spec:
+            if isinstance(part, tuple):
+                part = tuple(a for a in part if a in mesh.axis_names)
+                part = part[0] if len(part) == 1 else (part or None)
+            parts.append(part)
+        return P(*parts)
+
+    tok_spec = drop_pod(tok_spec)
+    logits_spec = drop_pod(logits_spec)
+    cache_spec = jax.tree.map(drop_pod, cache_spec,
+                              is_leaf=lambda x: isinstance(x, P))
+
+    mapped = shard_map(
+        step, mesh=mesh, axis_names=frozenset({"model"}),
+        in_specs=(jax.tree.map(
+            lambda s: P(*[p if p == "model" else None for p in s]),
+            pspecs, is_leaf=lambda x: isinstance(x, P)), P()),
+        out_specs=(P(None, "model"), {"k": P(None, None, "model", None,
+                                             None),
+                                      "v": P(None, None, "model", None,
+                                             None)}),
+        check_vma=False,
+    )
+
+    # struct args (dense path only touches these leaves)
+    from repro.models.model import Model
+    model = Model(cfg)
+    structs = model.structs()
+    arg_structs = (structs,
+                   jax.ShapeDtypeStruct((batch, seq), jnp.int32))
+    ns = lambda s: jax.sharding.NamedSharding(mesh, s)
+    in_sh = (jax.tree.map(lambda s: ns(drop_pod(s)), pspecs,
+                          is_leaf=lambda x: isinstance(x, P)),
+             ns(tok_spec))
+    out_sh = (ns(logits_spec), jax.tree.map(
+        lambda s: ns(s), cache_spec, is_leaf=lambda x: isinstance(x, P)))
+    return mapped, arg_structs, in_sh, out_sh, ()

@@ -1,0 +1,90 @@
+"""Pipeline-parallel serving as compiled SPMD (the paper's mechanism in
+production form): a GPipe-style microbatched prefill over a
+(stage, data, model) mesh. Stages exchange activations with
+``jax.lax.ppermute``; each stage owns a contiguous slice of the stacked
+period axis (the same slice a hydra cold-start worker fetches).
+
+This is the dry-run proof that the cold-start pipeline groups of
+serving/engine.py lower to a single SPMD executable on real hardware:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-8b \
+        --shape prefill_32k --policy ppipe
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import use_mesh
+from repro.models import transformer
+from repro.models.model import Model
+
+
+def supports(cfg: ModelConfig, n_stages: int = 4) -> bool:
+    return (not cfg.is_encdec and cfg.n_periods % n_stages == 0
+            and cfg.family in ("dense", "vlm", "moe"))
+
+
+def make_pp_prefill(cfg: ModelConfig, mesh, batch: int, seq: int,
+                    n_stages: int = 4, n_micro: int = 8):
+    """Returns (fn, arg_structs, in_shardings, out_shardings, donate) for a
+    pipelined prefill producing last-token logits."""
+    assert supports(cfg, n_stages)
+    assert batch % n_micro == 0
+    model = Model(cfg)
+    mb = batch // n_micro
+    dt = jnp.dtype(cfg.dtype)
+
+    def step(params, tokens):
+        stage = jax.lax.axis_index("stage")
+        mbs = tokens.reshape(n_micro, mb, seq)
+        positions = jnp.broadcast_to(jnp.arange(seq)[None], (mb, seq))
+        perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+        def loop(x, t):
+            # hand the previous activation to the next stage
+            x = jax.lax.ppermute(x, "stage", perm)
+            mb_idx = jnp.clip(t, 0, n_micro - 1)
+            emb = transformer.embed(cfg, params, mbs[mb_idx], positions,
+                                    dtype=dt)
+            x = jnp.where(stage == 0, emb, x)
+            x, _, _ = transformer.run_blocks(cfg, params["blocks"], x,
+                                             positions)
+            logits = transformer.head(cfg, params, x[:, -1:])[:, 0]
+            emit = (stage == n_stages - 1) & (t >= n_stages - 1)
+            out_t = jnp.where(emit, logits, jnp.zeros_like(logits))
+            return x, out_t
+
+        x0 = jnp.zeros((mb, seq, cfg.d_model), dt)
+        _, outs = jax.lax.scan(loop, x0, jnp.arange(n_micro + n_stages - 1))
+        logits = outs[n_stages - 1:]               # (n_micro, mb, V)
+        # broadcast from the last stage; f32 psum sidesteps XLA:CPU's
+        # AllReducePromotion crash on sub-f32 reduce collectives
+        logits = jax.lax.psum(logits.astype(jnp.float32), "stage").astype(dt)
+        return logits.reshape(batch, cfg.padded_vocab)
+
+    # physical specs: stacked period axis -> 'stage'; TP dims -> 'model'
+    with use_mesh(mesh, {"layers": "stage", "batch": ("data",)}):
+        full_specs = model.specs()
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), full_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+    # shard_map manual specs mention only the 'stage' axis
+    manual_specs = jax.tree.map(
+        lambda s: P(*[p if p == "stage" else None for p in s]),
+        full_specs, is_leaf=lambda x: isinstance(x, P))
+
+    mapped = shard_map(
+        step, mesh=mesh, axis_names=frozenset({"stage"}),
+        in_specs=(manual_specs, P()),
+        out_specs=P(),
+        check_vma=False,
+    )
+
+    tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    tok_sh = NamedSharding(mesh, P("data"))
+    logits_sh = NamedSharding(mesh, P("data", "model"))
+    return (mapped, (model.structs(), tok), (p_sh, tok_sh), logits_sh, ())

@@ -1,0 +1,121 @@
+"""Logical-axis sharding: models annotate tensors with *logical* axis names;
+a ``ShardingRules`` table maps those to physical mesh axes.  Outside a mesh
+context everything is a no-op, so the same model code runs on 1 CPU device
+and on the 512-chip production mesh.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+# Default logical->physical translation for the production (data, model) mesh.
+DEFAULT_RULES = {
+    "batch": ("data",),
+    "seq": None,            # activations: sequence replicated by default
+    "act_seq": None,        # layer-boundary residual stream; train/prefill
+                            # map this to 'model' (Megatron-style sequence
+                            # parallelism) so saved activations shard 16-way
+    "kv_seq": None,         # long-context decode overrides this to 'model' (SP)
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ffn": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_ffn": "model",   # used instead of 'experts' when n_experts < TP
+    "conv": None,
+    "state": None,
+    "dt_rank": None,
+    "layers": None,
+    "stage": "stage",       # only present on PP dry-run meshes
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: dict = dict(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    """Activate a mesh + logical rules for ``constrain`` / ``spec_for``."""
+    old = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    # drop mappings to axes the mesh doesn't actually have
+    if mesh is not None:
+        names = set(mesh.axis_names)
+
+        def _ok(ax):
+            if ax is None:
+                return None
+            if isinstance(ax, str):
+                return ax if ax in names else None
+            kept = tuple(a for a in ax if a in names)
+            return kept if kept else None
+
+        merged = {k: _ok(v) for k, v in merged.items()}
+    _CTX.rules = merged
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = old
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def resolve(logical_axes: Sequence[Optional[str]]) -> P:
+    """Translate a tuple of logical axis names into a PartitionSpec."""
+    rules = _CTX.rules
+    parts, used = [], set()
+    for name in logical_axes:
+        ax = rules.get(name) if name else None
+        # a physical axis may appear at most once in a spec
+        if ax is not None:
+            flat = (ax,) if isinstance(ax, str) else tuple(ax)
+            flat = tuple(a for a in flat if a not in used)
+            used.update(flat)
+            ax = flat if len(flat) != 1 else flat[0]
+            if isinstance(ax, tuple) and not ax:
+                ax = None
+        parts.append(ax)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def spec_for(logical_axes: Sequence[Optional[str]]):
+    """NamedSharding for the active mesh (or None outside a mesh)."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve(logical_axes))
+
+
+def constrain(x, *logical_axes):
+    """with_sharding_constraint under the active mesh; identity without one."""
+    s = spec_for(logical_axes)
+    if s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, s)

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: GQA decode attention (flash-decoding).
+
+One new query token per sequence attends to a long KV cache. Grid
+(B, Hkv, nk): all G = Hq/Hkv query heads of a KV group are processed
+together as a (G, hd) tile; the nk axis walks KV blocks sequentially with
+the online-softmax state in VMEM scratch. Per-sequence valid length
+``kv_len`` masks the tail.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, kv_block: int):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)               # (kb, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    valid_len = len_ref[0, 0]
+
+    kpos = ik * kv_block + jax.lax.broadcasted_iota(
+        jnp.int32, (1, kv_block), 1)                  # (1, kb)
+    mask = kpos < valid_len
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)                   # (G, kb)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *,
+                     scale: Optional[float] = None, kv_block: int = 512,
+                     interpret: bool = False):
+    """q (B,1,Hq,hd); caches (B,S,Hkv,hd); kv_len (B,) -> (B,1,Hq,hd)."""
+    b, one, hq, hd = q.shape
+    assert one == 1
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kb = min(kv_block, max(s, 8))
+    s_p = -(-s // kb) * kb
+
+    qg = q[:, 0].reshape(b, hkv, group, hd)           # (B,Hkv,G,hd)
+    kt = jnp.pad(k_cache, ((0, 0), (0, s_p - s), (0, 0), (0, 0))
+                 ).transpose(0, 2, 1, 3)              # (B,Hkv,S,hd)
+    vt = jnp.pad(v_cache, ((0, 0), (0, s_p - s), (0, 0), (0, 0))
+                 ).transpose(0, 2, 1, 3)
+    lens = kv_len.astype(jnp.int32).reshape(b, 1)
+
+    grid = (b, hkv, s_p // kb)
+    kernel = functools.partial(_kernel, scale=scale, kv_block=kb)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bi, h, ik: (bi, 0)),
+            pl.BlockSpec((1, 1, group, hd), lambda bi, h, ik: (bi, h, 0, 0)),
+            pl.BlockSpec((1, 1, kb, hd), lambda bi, h, ik: (bi, h, ik, 0)),
+            pl.BlockSpec((1, 1, kb, hd), lambda bi, h, ik: (bi, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, hd),
+                               lambda bi, h, ik: (bi, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lens, qg, kt, vt)
+
+    return out.reshape(b, 1, hq, hd)

@@ -1,0 +1,103 @@
+"""Kernel dispatch layer.
+
+Models call these wrappers; the backend is selected once per process:
+  * 'pallas'     — real TPU kernels (pl.pallas_call, compiled)
+  * 'interpret'  — same kernels, interpret=True (CPU correctness runs)
+  * 'ref'        — blocked pure-jnp implementations (default on CPU; also
+                   what the dry-run lowers, so the compiled HLO is flash-like)
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from repro.kernels import ref as _ref
+
+_BACKEND = None
+_ATTN_MODE = "masked_full"        # 'masked_full' | 'causal_skip' (§Perf)
+_DECODE_MODE = "scatter"          # 'scatter' | 'append' (§Perf it.5)
+
+
+def set_decode_mode(mode: str):
+    global _DECODE_MODE
+    assert mode in ("scatter", "append")
+    _DECODE_MODE = mode
+
+
+def decode_mode() -> str:
+    return _DECODE_MODE
+
+
+def set_attention_mode(mode: str):
+    global _ATTN_MODE
+    assert mode in ("masked_full", "causal_skip")
+    _ATTN_MODE = mode
+
+
+def attention_mode() -> str:
+    return _ATTN_MODE
+
+
+def backend() -> str:
+    global _BACKEND
+    if _BACKEND is None:
+        forced = os.environ.get("REPRO_KERNEL_BACKEND")
+        if forced:
+            _BACKEND = forced
+        else:
+            plat = jax.default_backend()
+            _BACKEND = "pallas" if plat == "tpu" else "ref"
+    return _BACKEND
+
+
+def set_backend(name: str):
+    global _BACKEND
+    assert name in ("pallas", "interpret", "ref")
+    _BACKEND = name
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                    kv_len=None, scale: Optional[float] = None,
+                    q_block: int = 512, kv_block: int = 1024):
+    """Prefill/train attention. q (B,Sq,Hq,hd); k,v (B,Sk,Hkv,hd)."""
+    be = backend()
+    if be in ("pallas", "interpret") and kv_len is None:
+        from repro.kernels import flash_attention as _fa
+        return _fa.flash_attention(
+            q, k, v, causal=causal, q_offset=q_offset, scale=scale,
+            interpret=(be == "interpret"))
+    if q.shape[1] * k.shape[1] <= 1 << 20:   # tiny: naive is cheaper to trace
+        return _ref.mha_reference(q, k, v, causal=causal, q_offset=q_offset,
+                                  kv_len=kv_len, scale=scale)
+    if causal and _ATTN_MODE == "causal_skip":
+        return _ref.flash_attention_blocked_skip(
+            q, k, v, q_offset=q_offset, kv_len=kv_len, scale=scale)
+    return _ref.flash_attention_blocked(
+        q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len,
+        q_block=q_block, kv_block=kv_block, scale=scale)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *,
+                     scale: Optional[float] = None, kv_block: int = 512):
+    """Single-token decode vs long KV. q (B,1,Hq,hd); cache (B,S,Hkv,hd)."""
+    be = backend()
+    if be in ("pallas", "interpret"):
+        from repro.kernels import decode_attention as _da
+        return _da.decode_attention(q, k_cache, v_cache, kv_len, scale=scale,
+                                    kv_block=kv_block,
+                                    interpret=(be == "interpret"))
+    return _ref.decode_attention_reference(q, k_cache, v_cache, kv_len,
+                                           scale=scale)
+
+
+def wkv6(r, k, v, w, u, initial_state=None, *, chunk: int = 64):
+    """RWKV6 recurrence. r,k,v,w (B,T,H,hd); u (H,hd)."""
+    be = backend()
+    if be in ("pallas", "interpret"):
+        from repro.kernels import wkv6 as _wkv
+        return _wkv.wkv6(r, k, v, w, u, initial_state, chunk=chunk,
+                         interpret=(be == "interpret"))
+    return _ref.wkv6_chunked(r, k, v, w, u, initial_state, chunk=chunk)

@@ -1,0 +1,280 @@
+"""Pure-jnp oracles for every Pallas kernel, plus blocked (flash-style)
+jnp implementations used by the models at scale (memory-sane HLO).
+
+Shapes:
+  q          (B, Sq, Hq, hd)
+  k, v       (B, Sk, Hkv, hd)      Hq % Hkv == 0 (GQA)
+  kv_len     (B,) int32 — valid cache length per sequence (optional)
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gqa_expand(k, n_q_heads):
+    """(B,S,Hkv,hd) -> (B,S,Hq,hd) by repeating KV heads."""
+    b, s, hkv, hd = k.shape
+    rep = n_q_heads // hkv
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# Naive attention oracle (materializes the score matrix) — unit-test scale.
+# ---------------------------------------------------------------------------
+
+
+def mha_reference(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                  kv_len=None, scale: Optional[float] = None):
+    b, sq, hq, hd = q.shape
+    sk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kx = _gqa_expand(k, hq)
+    vx = _gqa_expand(v, hq)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * scale
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(sk)
+        mask = kpos[None, :] <= qpos[:, None]
+    mask = jnp.broadcast_to(mask[None, None], (b, 1, sq, sk))
+    if kv_len is not None:
+        valid = jnp.arange(sk)[None, None, None, :] < kv_len[:, None, None, None]
+        mask = mask & valid
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vx.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocked flash attention, pure jnp — the scalable oracle the models use on
+# CPU and the reference the Pallas kernel is checked against.
+# ---------------------------------------------------------------------------
+
+
+def flash_attention_blocked(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                            kv_len=None, q_block: int = 512,
+                            kv_block: int = 1024,
+                            scale: Optional[float] = None):
+    b, sq, hq, hd = q.shape
+    sk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qb = min(q_block, sq)
+    kb = min(kv_block, sk)
+    # pad to block multiples
+    sq_p = -(-sq // qb) * qb
+    sk_p = -(-sk // kb) * kb
+    qp = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    nq, nk = sq_p // qb, sk_p // kb
+    rep = hq // k.shape[2]
+
+    qblocks = qp.reshape(b, nq, qb, hq, hd)
+    kblocks = kp.reshape(b, nk, kb, k.shape[2], hd)
+    vblocks = vp.reshape(b, nk, kb, k.shape[2], hd)
+
+    kv_limit = kv_len if kv_len is not None else jnp.full((b,), sk, jnp.int32)
+
+    def q_step(_, qi):
+        qblk = qblocks[:, qi].astype(jnp.float32)          # (b,qb,hq,hd)
+        qpos = qi * qb + jnp.arange(qb) + q_offset
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk = _gqa_expand(kblocks[:, ki], hq).astype(jnp.float32)
+            vblk = _gqa_expand(vblocks[:, ki], hq).astype(jnp.float32)
+            kpos = ki * kb + jnp.arange(kb)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk) * scale
+            msk = jnp.ones((qb, kb), bool)
+            if causal:
+                msk = kpos[None, :] <= qpos[:, None]
+            msk = jnp.broadcast_to(msk[None, None], (b, 1, qb, kb))
+            msk = msk & (kpos[None, None, None, :] <
+                         kv_limit[:, None, None, None])
+            s = jnp.where(msk, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vblk)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hq, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hq, qb), jnp.float32)
+        a0 = jnp.zeros((b, hq, qb, hd), jnp.float32)
+        # checkpoint the kv step: without it the scan VJP stacks the (qb,kb)
+        # probability blocks for every step — the full S^2 score matrix
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_step),
+                                      (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]       # (b,hq,qb,hd)
+        return None, out.transpose(0, 2, 1, 3)             # (b,qb,hq,hd)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))    # (nq,b,qb,hq,hd)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, sq_p, hq, hd)
+    return out[:, :sq].astype(q.dtype)
+
+
+def flash_attention_blocked_skip(q, k, v, *, q_offset: int = 0, kv_len=None,
+                                 q_block: int = 2048, kv_block: int = 2048,
+                                 scale: Optional[float] = None):
+    """Causal blocked attention that SKIPS fully-masked KV blocks: each q
+    block only scans kv blocks up to its own end, halving score FLOPs vs
+    the masked-full baseline (EXPERIMENTS.md §Perf it.4). The q-block loop
+    is a Python loop (static per-block KV extents)."""
+    b, sq, hq, hd = q.shape
+    sk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qb = min(q_block, sq)
+    kb = min(kv_block, sk)
+    sq_p = -(-sq // qb) * qb
+    sk_p = -(-sk // kb) * kb
+    qp = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    nq = sq_p // qb
+    kblocks = kp.reshape(b, sk_p // kb, kb, k.shape[2], hd)
+    vblocks = vp.reshape(b, sk_p // kb, kb, k.shape[2], hd)
+    kv_limit = kv_len if kv_len is not None else jnp.full((b,), sk, jnp.int32)
+
+    outs = []
+    for qi in range(nq):
+        qblk = qp[:, qi * qb:(qi + 1) * qb].astype(jnp.float32)
+        qpos = qi * qb + jnp.arange(qb) + q_offset
+        n_kv = min(-(-((qi + 1) * qb + q_offset) // kb), sk_p // kb)
+
+        def kv_step(carry, ki, qblk=qblk, qpos=qpos):
+            m, l, acc = carry
+            kblk = _gqa_expand(kblocks[:, ki], hq).astype(jnp.float32)
+            vblk = _gqa_expand(vblocks[:, ki], hq).astype(jnp.float32)
+            kpos = ki * kb + jnp.arange(kb)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk) * scale
+            msk = (kpos[None, :] <= qpos[:, None])[None, None]
+            msk = msk & (kpos[None, None, None, :] <
+                         kv_limit[:, None, None, None])
+            s = jnp.where(msk, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vblk)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hq, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hq, qb), jnp.float32)
+        a0 = jnp.zeros((b, hq, qb, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_step), (m0, l0, a0),
+                                      jnp.arange(n_kv))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(out.transpose(0, 2, 1, 3))
+    out = jnp.concatenate(outs, axis=1)
+    return out[:, :sq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention oracle: one new token per sequence against a long cache.
+# ---------------------------------------------------------------------------
+
+
+def decode_attention_reference(q, k_cache, v_cache, kv_len, *,
+                               scale: Optional[float] = None):
+    """q (B,1,Hq,hd); caches (B,S,Hkv,hd); kv_len (B,) valid lengths."""
+    return mha_reference(q, k_cache, v_cache, causal=False, kv_len=kv_len,
+                         scale=scale)
+
+
+def decode_attention_with_stats(q, k_cache, v_cache, kv_len, *,
+                                scale: Optional[float] = None):
+    """Decode attention that also returns the softmax stats (m, l) so a new
+    token's contribution can be combined without writing it to the cache
+    first (flash-decoding append-combine; §Perf it.5).
+    Returns (out (B,1,Hq,hd) f32, m (B,Hq) f32, l (B,Hq) f32)."""
+    b, one, hq, hd = q.shape
+    sk = k_cache.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kx = _gqa_expand(k_cache, hq).astype(jnp.float32)
+    vx = _gqa_expand(v_cache, hq).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kx) * scale
+    valid = jnp.arange(sk)[None, None, None, :] < kv_len[:, None, None, None]
+    s = jnp.where(valid, s, NEG_INF)
+    m = s.max(-1)[..., 0]                                  # (B,Hq)
+    p = jnp.where(valid, jnp.exp(s - m[..., None, None]), 0.0)
+    l = p.sum(-1)[..., 0]                                  # (B,Hq)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vx)             # unnormalized
+    return out, m, l
+
+
+# ---------------------------------------------------------------------------
+# WKV6 (RWKV6 'Finch') recurrence oracle.
+#   state S (B,H,hd,hd);   y_t = (S_{t-1} + diag(u) k_t v_t^T)^T r_t
+#   S_t = diag(w_t) S_{t-1} + k_t v_t^T            (w_t data-dependent decay)
+# ---------------------------------------------------------------------------
+
+
+def wkv6_reference(r, k, v, w, u, initial_state=None):
+    """r,k,v,w: (B,T,H,hd); u: (H,hd). Returns (y (B,T,H,hd), final_state)."""
+    b, t, h, n = r.shape
+    f32 = jnp.float32
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, n, n), f32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs                                # (b,h,n) each
+        kv = kt[..., :, None] * vt[..., None, :]           # (b,h,n,n)
+        St = S + u[None, :, :, None] * kv
+        # y[j] = sum_i r[i] * St[i,j]
+        y = jnp.einsum("bhi,bhij->bhj", rt, St)
+        S_new = jnp.exp(-jnp.exp(wt))[..., None] * S + kv
+        return S_new, y
+
+    xs = tuple(x.astype(f32).transpose(1, 0, 2, 3) for x in (r, k, v, w))
+    S, ys = jax.lax.scan(step, initial_state, xs)
+    y = ys.transpose(1, 0, 2, 3)                           # (b,t,h,n)
+    return y.astype(r.dtype), S
+
+
+def wkv6_chunked(r, k, v, w, u, initial_state=None, chunk: int = 64):
+    """Same recurrence, outer scan over chunks with checkpointed inner scan
+    so training memory is O(T/chunk) states instead of O(T)."""
+    b, t, h, n = r.shape
+    if t <= chunk:
+        return wkv6_reference(r, k, v, w, u, initial_state)
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, n, n), jnp.float32)
+    pad = (-t) % chunk
+    if pad:
+        r, k, v = (jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for x in (r, k, v))
+        # padded steps must not decay the state: w -> -inf gives decay 1
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=-1e9)
+    tc = (t + pad) // chunk
+
+    def resh(x):
+        return (x.astype(jnp.float32)
+                .reshape(b, tc, chunk, h, n).transpose(1, 0, 2, 3, 4))
+
+    def outer(S, xs):
+        rc, kc, vc, wc = xs
+        y, S_new = jax.checkpoint(
+            lambda S0, a: wkv6_reference(a[0], a[1], a[2], a[3], u, S0)
+        )(S, (rc, kc, vc, wc))
+        return S_new, y
+
+    S, ys = jax.lax.scan(outer, initial_state,
+                         (resh(r), resh(k), resh(v), resh(w)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, tc * chunk, h, n)[:, :t]
+    return y.astype(r.dtype), S

@@ -1,0 +1,24 @@
+"""Production meshes. Functions (not module-level constants) so importing
+never touches jax device state."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_pp_mesh(n_stages: int = 4):
+    """Technique-representative mesh: a pipeline axis for the paper's
+    cold-start groups, within one pod."""
+    return jax.make_mesh((n_stages, 256 // n_stages // 16, 16),
+                         ("stage", "data", "model"))
+
+
+def make_cpu_mesh():
+    """Single-device mesh for tests/examples."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,151 @@
+"""Per-(arch x shape) input specs and sharding rules for the dry-run and
+the production launchers.
+
+Rules are the hillclimbing surface: ``rules_for(shape, policy)`` returns the
+logical->physical table; policies beyond 'baseline' are recorded in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import resolve, use_mesh
+from repro.models.common import param_structs
+from repro.models.model import Model
+from repro.training import optimizer as opt
+
+
+def rules_for(shape: ShapeConfig, policy: str = "baseline",
+              cfg: Optional[ModelConfig] = None) -> dict:
+    """Logical-axis overrides per input shape.
+
+    baseline: DP over batch, TP over heads/ffn/vocab/experts — the paper-
+              faithful megatron-style layout; + sequence parallelism on the
+              residual stream for train/prefill; + FSDP for archs whose
+              TP=16 weight slice exceeds one chip's HBM.
+    """
+    rules: dict = {}
+    if cfg is not None and cfg.fsdp:
+        # weights' d_model dim additionally sharded over 'data'; activations
+        # are unaffected ('batch' claims 'data' first in resolve())
+        rules["embed"] = "data"
+    if (shape.kind in ("train", "prefill") and shape.seq_len % 16 == 0
+            and policy != "nosp"):
+        # Megatron-style sequence parallelism on the residual stream: saved
+        # (B,S,d) layer-boundary activations shard over 'model'
+        rules["act_seq"] = "model"
+    if shape.kind in ("decode", "prefill"):
+        # KV-head counts (4/8/12/40) don't divide TP=16, so the KV cache
+        # shards its *sequence* dim over 'model' (flash-decoding style SP).
+        if shape.global_batch == 1:
+            # long-context decode: batch unshardable; spread the cache over
+            # every axis we have
+            rules["batch"] = None
+            rules["kv_seq"] = ("data", "model")
+            rules["kv_heads"] = None
+        else:
+            rules["kv_seq"] = "model"
+            rules["kv_heads"] = None
+    return rules
+
+
+def batch_sharding_spec(shape: ShapeConfig) -> P:
+    if shape.kind == "decode" and shape.global_batch == 1:
+        return P()
+    return P(("pod", "data"))
+
+
+def _fix1(mesh, s: P) -> NamedSharding:
+    """Drop axes absent from this mesh (e.g. 'pod' on single-pod)."""
+    parts = []
+    for part in s:
+        if part is None:
+            parts.append(None)
+            continue
+        ax = (part,) if isinstance(part, str) else tuple(part)
+        ax = tuple(a for a in ax if a in mesh.axis_names)
+        parts.append(ax if len(ax) > 1 else (ax[0] if ax else None))
+    return NamedSharding(mesh, P(*parts))
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: _fix1(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+              policy: str = "baseline", remat: str = "full"):
+    """Build (fn, arg_structs, in_shardings, out_shardings) for one cell."""
+    model = Model(cfg)
+    rules = rules_for(shape, policy, cfg)
+    # VLM: the assigned seq_len covers the full decoder context; the image
+    # prefix occupies the first n_image_tokens of it
+    text_seq = shape.seq_len - (cfg.n_image_tokens
+                                if cfg.family == "vlm" else 0)
+    with use_mesh(mesh, rules):
+        pspecs = model.specs()
+        p_sh = _named(mesh, pspecs)
+        bspec = batch_sharding_spec(shape)
+        dtype = jnp.dtype(cfg.dtype)
+
+        if shape.kind == "train":
+            from repro.training.train_step import make_train_step
+            step = make_train_step(model, remat=remat)
+            batch_structs = model.input_structs(shape.global_batch,
+                                                text_seq)
+            batch_sh = jax.tree.map(
+                lambda s: _fix1(mesh, bspec if s.ndim >= 2 else P()),
+                batch_structs)
+            ostructs = opt.state_structs(model.structs())
+            o_specs = opt.state_specs(model.defs, zero1=True)
+            o_sh = _named(mesh, o_specs)
+            args = (model.structs(), ostructs, batch_structs)
+            in_sh = (p_sh, o_sh, batch_sh)
+            out_sh = (p_sh, o_sh, None)
+            return step, args, in_sh, out_sh, (0, 1)   # donate params+opt
+
+        if shape.kind == "prefill":
+            def prefill_step(params, batch):
+                logits, cache = model.prefill(params, batch, shape.seq_len,
+                                              remat="none")
+                return logits, cache
+
+            batch_structs = model.input_structs(shape.global_batch,
+                                                text_seq)
+            batch_sh = jax.tree.map(lambda s: _fix1(mesh, bspec),
+                                    batch_structs)
+            cache_sh = _named(mesh, jax.tree.map(
+                resolve, model.cache_axes(),
+                is_leaf=lambda x: isinstance(x, tuple) and
+                all(isinstance(i, (str, type(None))) for i in x)))
+            logits_sh = _fix1(mesh, P(("pod", "data")))
+            args = (model.structs(), batch_structs)
+            return (prefill_step, args, (p_sh, batch_sh),
+                    (logits_sh, cache_sh), ())
+
+        # decode: one new token against a cache of seq_len
+        cache_structs = model.init_cache(shape.global_batch, shape.seq_len,
+                                         as_structs=True)
+        cache_sh = _named(mesh, jax.tree.map(
+            resolve, model.cache_axes(),
+            is_leaf=lambda x: isinstance(x, tuple) and
+            all(isinstance(i, (str, type(None))) for i in x)))
+
+        def serve_step(params, cache, tokens, positions):
+            return model.decode_step(params, cache, tokens, positions)
+
+        tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        tok_sh = _fix1(mesh, bspec)
+        logits_sh = _fix1(
+            mesh, P() if shape.global_batch == 1 else P(("pod", "data")))
+        args = (model.structs(), cache_structs, tok, pos)
+        in_sh = (p_sh, cache_sh, tok_sh, tok_sh)
+        out_sh = (logits_sh, cache_sh)
+        return serve_step, args, in_sh, out_sh, (1,)   # donate the cache

@@ -1,0 +1,167 @@
+"""GQA attention (self + cross) with contiguous KV cache, RoPE, QKV bias."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.kernels import ops
+from repro.models.common import ParamDef, apply_rope
+
+
+def attn_defs(cfg: ModelConfig, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    defs = {
+        "w_q": ParamDef((d, hq * hd), ("embed", "heads")),
+        "w_k": ParamDef((d, hkv * hd), ("embed", "kv_heads")),
+        "w_v": ParamDef((d, hkv * hd), ("embed", "kv_heads")),
+        "w_o": ParamDef((hq * hd, d), ("heads", "embed")),
+        "norm": ParamDef((d,), ("embed",), init="ones"),
+    }
+    if cfg.qkv_bias and not cross:
+        defs["b_q"] = ParamDef((hq * hd,), ("heads",), init="zeros")
+        defs["b_k"] = ParamDef((hkv * hd,), ("kv_heads",), init="zeros")
+        defs["b_v"] = ParamDef((hkv * hd,), ("kv_heads",), init="zeros")
+    return defs
+
+
+def _project(cfg, p, x, which: str, n_heads: int):
+    w = p[f"w_{which}"]
+    y = jnp.einsum("bsd,dh->bsh", x, w.astype(x.dtype))
+    if cfg.qkv_bias and f"b_{which}" in p:
+        y = y + p[f"b_{which}"].astype(x.dtype)
+    b, s, _ = y.shape
+    return y.reshape(b, s, n_heads, cfg.head_dim)
+
+
+def make_kv_cache(cfg: ModelConfig, n_attn_layers: int, batch: int,
+                  max_seq: int, dtype) -> dict:
+    """Contiguous KV cache for the SPMD serve path (paged cache lives in
+    serving/kvcache.py). Layout (L, B, S, Hkv, hd)."""
+    shape = (n_attn_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def kv_cache_structs(cfg: ModelConfig, n_attn_layers: int, batch: int,
+                     max_seq: int, dtype) -> dict:
+    shape = (n_attn_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+KV_CACHE_AXES = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+
+
+def self_attention(cfg: ModelConfig, p: dict, x, *, positions,
+                   causal: bool = True,
+                   kv_cache: Optional[Tuple] = None,
+                   decode: bool = False,
+                   allow_append: bool = True):
+    """x (B,S,d). positions (B,S) absolute positions of the tokens in x.
+
+    Full-sequence mode (train/prefill): attends within x; if kv_cache slices
+    (k,v per-layer, (B,Smax,Hkv,hd)) are given they are filled at [0, S).
+
+    Decode mode: S == 1; k/v are scattered into the cache at ``positions``
+    and attention runs against the cache with per-sequence lengths.
+    Returns (out (B,S,d), (k_cache', v_cache') or None).
+    """
+    bsz, seq, _ = x.shape
+    q = _project(cfg, p, x, "q", cfg.n_heads)
+    k = _project(cfg, p, x, "k", cfg.n_kv_heads)
+    v = _project(cfg, p, x, "v", cfg.n_kv_heads)
+    if cfg.pos_embed == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+
+    new_cache = None
+    if not decode:
+        if kv_cache is not None:
+            ck, cv = kv_cache
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, 0, 0, 0))
+            new_cache = (ck, cv)
+        q_off = 0
+        out = ops.flash_attention(q, k, v, causal=causal, q_offset=q_off)
+    else:
+        assert kv_cache is not None and seq == 1
+        ck, cv = kv_cache
+        if ops.decode_mode() == "append" and allow_append:
+            # §Perf it.5: attend over the old cache [0, pos) and combine the
+            # new token in closed form; the cache write happens once,
+            # outside the layer scan (run_blocks), so the full cache is not
+            # threaded through the loop carries.
+            from repro.kernels import ref as _ref
+            out_c, m_c, l_c = _ref.decode_attention_with_stats(
+                q, ck, cv, positions[:, 0])
+            scale = 1.0 / (cfg.head_dim ** 0.5)
+            rep = cfg.n_heads // cfg.n_kv_heads
+            k_exp = jnp.repeat(k, rep, axis=2).astype(jnp.float32)
+            v_exp = jnp.repeat(v, rep, axis=2).astype(jnp.float32)
+            s_n = jnp.einsum("bqhd,bqhd->bh", q.astype(jnp.float32),
+                             k_exp) * scale                # (B,Hq)
+            m_new = jnp.maximum(m_c, s_n)
+            alpha = jnp.exp(m_c - m_new)
+            beta = jnp.exp(s_n - m_new)
+            num = out_c * alpha[:, None, :, None] \
+                + beta[:, None, :, None] * v_exp
+            den = l_c * alpha + beta
+            out = (num / den[:, None, :, None]).astype(q.dtype)
+            new_cache = ("append", k, v)
+        else:
+            def put(cache, new):
+                def upd(c_b, n_b, pos):
+                    return jax.lax.dynamic_update_slice(
+                        c_b, n_b.astype(c_b.dtype), (pos, 0, 0))
+                return jax.vmap(upd)(cache, new, positions[:, 0])
+
+            ck = put(ck, k)
+            cv = put(cv, v)
+            ck = constrain(ck, *KV_CACHE_AXES[1:])
+            cv = constrain(cv, *KV_CACHE_AXES[1:])
+            new_cache = (ck, cv)
+            kv_len = positions[:, 0] + 1
+            out = ops.decode_attention(q, ck, cv, kv_len)
+
+    out = constrain(out, "batch", "seq", "heads", "head_dim")
+    b, s, hq, hd = out.shape
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(b, s, hq * hd),
+                   p["w_o"].astype(x.dtype))
+    # seq-sharded output: turns the TP partial-sum all-reduce into a
+    # reduce-scatter when sequence parallelism is active (§Perf it.2)
+    return constrain(y, "batch", "act_seq", "embed"), new_cache
+
+
+def cross_attention(cfg: ModelConfig, p: dict, x, memory=None,
+                    mem_kv: Optional[Tuple] = None):
+    """Encoder-decoder cross attention. ``memory`` (B,Sm,d) or precomputed
+    ``mem_kv`` (k,v) (B,Sm,Hkv,hd) — the serve path precomputes them once."""
+    if mem_kv is None:
+        k = _project(cfg, p, memory, "k", cfg.n_kv_heads)
+        v = _project(cfg, p, memory, "v", cfg.n_kv_heads)
+    else:
+        k, v = mem_kv
+    q = _project(cfg, p, x, "q", cfg.n_heads)
+    out = ops.flash_attention(q, k, v, causal=False)
+    b, s, hq, hd = out.shape
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(b, s, hq * hd),
+                   p["w_o"].astype(x.dtype))
+    return constrain(y, "batch", "seq", "embed")
+
+
+def precompute_cross_kv(cfg: ModelConfig, p: dict, memory):
+    k = _project(cfg, p, memory, "k", cfg.n_kv_heads)
+    v = _project(cfg, p, memory, "v", cfg.n_kv_heads)
+    return k, v

@@ -1,0 +1,128 @@
+"""Shared model building blocks: ParamDef trees, RMSNorm, RoPE, init."""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import resolve
+
+
+# ---------------------------------------------------------------------------
+# Parameter definition trees.  A model is described once as a pytree of
+# ParamDef; init / sharding-spec / ShapeDtypeStruct trees derive from it.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]       # logical axis names, one per dim
+    init: str = "normal"                  # normal | zeros | ones | embed
+    scale: float = 1.0                    # extra init scale (e.g. 1/sqrt(2L))
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def map_defs(fn, defs):
+    return jax.tree.map(fn, defs, is_leaf=_is_def)
+
+
+def init_params(defs, key, dtype):
+    """Random-init a ParamDef tree into real arrays."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for d, k in zip(leaves, keys):
+        if d.init == "zeros":
+            a = jnp.zeros(d.shape, dtype)
+        elif d.init == "ones":
+            a = jnp.ones(d.shape, dtype)
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            std = d.scale / math.sqrt(max(fan_in, 1))
+            a = (jax.random.normal(k, d.shape, jnp.float32) * std).astype(dtype)
+        out.append(a)
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_specs(defs):
+    """PartitionSpec tree (resolved under the active mesh rules)."""
+    return map_defs(lambda d: resolve(d.axes), defs)
+
+
+def param_structs(defs, dtype):
+    return map_defs(lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs)
+
+
+def param_bytes(defs, bytes_per_param=2) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=_is_def)
+    return sum(math.prod(d.shape) for d in leaves) * bytes_per_param
+
+
+def stack_defs(defs, n: int, axis_name: Optional[str] = None):
+    """Prepend a stacking dim (e.g. periods) to every ParamDef in the tree."""
+    return map_defs(
+        lambda d: ParamDef((n,) + d.shape, (axis_name,) + d.axes, d.init, d.scale),
+        defs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps: float):
+    """bf16-safe RMSNorm: only the variance reduction runs in fp32; the
+    (B,S,d)-sized tensors stay in the compute dtype so backward cotangents
+    (and the TP all-reduces GSPMD places inside them) are bf16, not fp32 —
+    this halves per-layer collective volume (EXPERIMENTS.md §Perf it.1)."""
+    dt = x.dtype
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(dt)
+    return x * inv * w.astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def cross_entropy(logits, labels, z_loss: float = 0.0):
+    """logits (..., V) fp32-cast CE with optional z-loss; labels < 0 masked."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.clip(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * lse**2
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

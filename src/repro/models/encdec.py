@@ -1,0 +1,141 @@
+"""Whisper-style encoder-decoder backbone. The conv/audio frontend is a STUB:
+inputs are precomputed frame embeddings (B, n_frames, d_model)."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models.common import ParamDef, rmsnorm, stack_defs
+
+
+def encdec_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    enc_block = {
+        "attn": attn.attn_defs(cfg),
+        "mlp": mlp_mod.dense_mlp_defs(cfg),
+    }
+    dec_block = {
+        "self": attn.attn_defs(cfg),
+        "cross": attn.attn_defs(cfg, cross=True),
+        "cross_norm": ParamDef((d,), ("embed",), init="ones"),
+        "mlp": mlp_mod.dense_mlp_defs(cfg),
+    }
+    return {
+        "embed": {
+            "tok": ParamDef((cfg.padded_vocab, d), ("vocab", "embed")),
+            "pos": ParamDef((cfg.max_position, d), (None, "embed")),
+            "enc_pos": ParamDef((cfg.n_audio_frames, d), (None, "embed")),
+        },
+        "encoder": stack_defs(enc_block, cfg.encoder_layers, "layers"),
+        "enc_final_norm": ParamDef((d,), ("embed",), init="ones"),
+        "blocks": stack_defs(dec_block, cfg.n_layers, "layers"),
+        "final_norm": ParamDef((d,), ("embed",), init="ones"),
+        "lm_head": ParamDef((d, cfg.padded_vocab), ("embed", "vocab")),
+    }
+
+
+def encode(cfg: ModelConfig, params: dict, frames):
+    """frames (B,F,d) stub embeddings -> encoder memory (B,F,d)."""
+    b, f, d = frames.shape
+    x = frames + params["embed"]["enc_pos"][:f].astype(frames.dtype)
+    x = constrain(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(f)[None], (b, f))
+
+    def step(h, pslice):
+        xin = rmsnorm(h, pslice["attn"]["norm"], cfg.norm_eps)
+        y, _ = attn.self_attention(cfg, pslice["attn"], xin,
+                                   positions=positions, causal=False)
+        h = h + y
+        xin = rmsnorm(h, pslice["mlp"]["norm"], cfg.norm_eps)
+        h = h + mlp_mod.dense_mlp(pslice["mlp"], xin)
+        return h, None
+
+    x, _ = jax.lax.scan(step, x, params["encoder"])
+    return rmsnorm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def precompute_cross_kv(cfg: ModelConfig, params: dict, memory):
+    """Per-decoder-layer cross K/V: (L,B,F,Hkv,hd) each."""
+    def one(pslice, _):
+        k, v = attn.precompute_cross_kv(cfg, pslice["cross"], memory)
+        return None, (k, v)
+
+    _, (k, v) = jax.lax.scan(lambda c, p: one(p, c), None, params["blocks"])
+    return {"k": k, "v": v}
+
+
+def cross_kv_structs(cfg: ModelConfig, batch: int, dtype):
+    shp = (cfg.n_layers, batch, cfg.n_audio_frames, cfg.n_kv_heads,
+           cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shp, dtype),
+            "v": jax.ShapeDtypeStruct(shp, dtype)}
+
+
+def decoder(cfg: ModelConfig, params: dict, tokens, positions, *,
+            memory=None, cross_kv: Optional[dict] = None,
+            self_cache: Optional[dict] = None, decode: bool = False,
+            remat: str = "none", dtype=None):
+    """Decoder stack. Either ``memory`` (train: cross K/V computed inline) or
+    precomputed ``cross_kv`` (serve path). Returns (hidden, new_self_cache)."""
+    x = jnp.take(params["embed"]["tok"], tokens, axis=0)
+    if dtype is not None:
+        x = x.astype(dtype)
+    x = x + jnp.take(params["embed"]["pos"], positions, axis=0).astype(x.dtype)
+    x = constrain(x, "batch", "seq", "embed")
+
+    if cross_kv is None:
+        assert memory is not None
+        cross_kv = precompute_cross_kv(cfg, params, memory)
+
+    def step(h, xs):
+        pslice, ckv_k, ckv_v, cslice = xs
+        xin = rmsnorm(h, pslice["self"]["norm"], cfg.norm_eps)
+        kvc = (cslice["k"], cslice["v"]) if cslice is not None else None
+        y, nc = attn.self_attention(cfg, pslice["self"], xin,
+                                    positions=positions, causal=True,
+                                    kv_cache=kvc, decode=decode,
+                                    allow_append=False)
+        h = constrain(h + y, "batch", "act_seq", "embed")
+        xin = rmsnorm(h, pslice["cross_norm"], cfg.norm_eps)
+        y = attn.cross_attention(cfg, pslice["cross"], xin,
+                                 mem_kv=(ckv_k, ckv_v))
+        h = h + y
+        xin = rmsnorm(h, pslice["mlp"]["norm"], cfg.norm_eps)
+        h = constrain(h + mlp_mod.dense_mlp(pslice["mlp"], xin),
+                      "batch", "act_seq", "embed")
+        new_c = {"k": nc[0], "v": nc[1]} if nc is not None else None
+        return h, new_c
+
+    if remat in ("full", "dots"):
+        pol = (None if remat == "full" else
+               jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        step = jax.checkpoint(step, prevent_cse=False, policy=pol)
+
+    xs = (params["blocks"], cross_kv["k"], cross_kv["v"], self_cache)
+    x, new_cache = jax.lax.scan(step, x, xs)
+    return x, new_cache
+
+
+def head(cfg: ModelConfig, params: dict, x):
+    xn = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", xn, params["lm_head"].astype(xn.dtype))
+    if cfg.padded_vocab != cfg.vocab:
+        pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad, jnp.asarray(-1e30, logits.dtype), logits)
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def init_self_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype,
+                    as_structs: bool = False):
+    shp = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    if as_structs:
+        return {"k": jax.ShapeDtypeStruct(shp, dtype),
+                "v": jax.ShapeDtypeStruct(shp, dtype)}
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}

@@ -1,0 +1,146 @@
+"""Mamba-1 selective-SSM mixer (Jamba's recurrent layer).
+
+Full-sequence mode uses a two-level chunked scan: the outer ``lax.scan``
+carries the SSM state across chunks (checkpointed boundaries), the inner
+per-step scan is wrapped in ``jax.checkpoint`` so training memory is
+O(S/chunk * B*d_in*n) instead of O(S * B*d_in*n).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import ParamDef, silu
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.mamba_expand * cfg.d_model
+    dt_rank = max(1, d_in // 16)
+    return d_in, cfg.mamba_d_state, cfg.mamba_d_conv, dt_rank
+
+
+def mamba_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in, n, d_conv, dt_rank = _dims(cfg)
+    return {
+        "in_proj": ParamDef((d, 2 * d_in), ("embed", "ffn")),
+        "conv_w": ParamDef((d_conv, d_in), ("conv", "ffn")),
+        "conv_b": ParamDef((d_in,), ("ffn",), init="zeros"),
+        "x_proj": ParamDef((d_in, dt_rank + 2 * n), ("ffn", None)),
+        "dt_w": ParamDef((dt_rank, d_in), ("dt_rank", "ffn")),
+        "dt_b": ParamDef((d_in,), ("ffn",), init="zeros"),
+        "A_log": ParamDef((d_in, n), ("ffn", "state"), init="ones"),
+        "D": ParamDef((d_in,), ("ffn",), init="ones"),
+        "out_proj": ParamDef((d_in, d), ("ffn", "embed")),
+        "norm": ParamDef((d,), ("embed",), init="ones"),
+    }
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    d_in, n, d_conv, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, d_in), dtype),
+        "h": jnp.zeros((batch, d_in, n), jnp.float32),
+    }
+
+
+MAMBA_CACHE_AXES = {
+    "conv": ("batch", None, "ffn"),
+    "h": ("batch", "ffn", "state"),
+}
+
+
+def _causal_conv(x, conv_w, conv_b, history=None):
+    """x (B,S,d_in); history (B,d_conv-1,d_in) prepended (zeros if None)."""
+    d_conv = conv_w.shape[0]
+    b, s, d_in = x.shape
+    if history is None:
+        history = jnp.zeros((b, d_conv - 1, d_in), x.dtype)
+    xp = jnp.concatenate([history.astype(x.dtype), x], axis=1)
+    y = jnp.zeros_like(x)
+    for i in range(d_conv):
+        y = y + conv_w[i].astype(x.dtype) * jax.lax.dynamic_slice_in_dim(
+            xp, i, s, axis=1)
+    return y + conv_b.astype(x.dtype), xp[:, -(d_conv - 1):, :]
+
+
+def _ssm_inputs(cfg, p, xc):
+    """xc (B,S,d_in) post-conv activations -> (dt, B, C, A)."""
+    d_in, n, _, dt_rank = _dims(cfg)
+    dbc = jnp.einsum("bsd,dr->bsr", xc, p["x_proj"].astype(xc.dtype))
+    dt_r = dbc[..., :dt_rank]
+    Bm = dbc[..., dt_rank:dt_rank + n].astype(jnp.float32)
+    Cm = dbc[..., dt_rank + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_r, p["dt_w"].astype(xc.dtype))
+        .astype(jnp.float32) + p["dt_b"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))           # (d_in, n)
+    return dt, Bm, Cm, A
+
+
+def _scan_chunk(A, h0, dt, Bm, Cm, u):
+    """Sequential scan inside one chunk. dt,u (B,c,d_in); Bm,Cm (B,c,n)."""
+    def step(h, xs):
+        dt_t, b_t, c_t, u_t = xs
+        dA = jnp.exp(dt_t[..., None] * A[None])            # (B,d_in,n)
+        dBu = (dt_t * u_t)[..., None] * b_t[:, None, :]    # (B,d_in,n)
+        h_new = dA * h + dBu
+        y = jnp.einsum("bdn,bn->bd", h_new, c_t)
+        return h_new, y
+
+    xs = (dt.transpose(1, 0, 2), Bm.transpose(1, 0, 2),
+          Cm.transpose(1, 0, 2), u.transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return h, ys.transpose(1, 0, 2)                        # (B,c,d_in)
+
+
+def mamba_mixer(cfg: ModelConfig, p: dict, x, *, cache: Optional[dict] = None,
+                decode: bool = False, chunk: int = 64) -> Tuple:
+    """x (B,S,d). Returns (y (B,S,d), new_cache)."""
+    b, s, d = x.shape
+    d_in, n, d_conv, _ = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    x1, z = jnp.split(xz, 2, axis=-1)
+    x1 = constrain(x1, "batch", "seq", "ffn")
+
+    history = cache["conv"] if cache is not None else None
+    xc, new_hist = _causal_conv(x1, p["conv_w"], p["conv_b"], history)
+    xc = silu(xc)
+
+    dt, Bm, Cm, A = _ssm_inputs(cfg, p, xc)
+    u = xc.astype(jnp.float32)
+    h0 = (cache["h"] if cache is not None
+          else jnp.zeros((b, d_in, n), jnp.float32))
+
+    if decode or s == 1:
+        h, ys = _scan_chunk(A, h0, dt, Bm, Cm, u)
+    else:
+        c = min(chunk, s)
+        if s % c:
+            pad = c - s % c
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+            u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        nc = dt.shape[1] // c
+
+        def outer(h, xs):
+            dt_c, b_c, c_c, u_c = xs
+            h, ys = jax.checkpoint(
+                lambda h_, args: _scan_chunk(A, h_, *args))(h, (dt_c, b_c, c_c, u_c))
+            return h, ys
+
+        resh = lambda a: a.reshape(b, nc, c, a.shape[-1]).transpose(1, 0, 2, 3)
+        h, ys = jax.lax.scan(outer, h0, (resh(dt), resh(Bm), resh(Cm), resh(u)))
+        ys = ys.transpose(1, 0, 2, 3).reshape(b, nc * c, d_in)[:, :s]
+
+    y = ys.astype(x.dtype) + p["D"].astype(x.dtype) * xc
+    y = y * silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    new_cache = {"conv": new_hist.astype(x.dtype), "h": h}
+    return constrain(out, "batch", "seq", "embed"), new_cache

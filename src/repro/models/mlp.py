@@ -1,0 +1,166 @@
+"""Dense gated MLP and sort-based dropping MoE (MaxText-style dispatch:
+no one-hot einsum, FLOPs stay proportional to *active* experts)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import ParamDef, silu
+
+
+# ---------------------------------------------------------------------------
+# Dense gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def dense_mlp_defs(cfg: ModelConfig, d_ff: int = 0) -> dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    return {
+        "w_gate": ParamDef((d, ff), ("embed", "ffn")),
+        "w_up": ParamDef((d, ff), ("embed", "ffn")),
+        "w_down": ParamDef((ff, d), ("ffn", "embed")),
+        "norm": ParamDef((d,), ("embed",), init="ones"),
+    }
+
+
+def dense_mlp(p: dict, x):
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    h = constrain(silu(g) * u, "batch", "seq", "ffn")
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+    # seq-sharded output -> reduce-scatter under SP (§Perf it.2)
+    return constrain(y, "batch", "act_seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    d, e, eff = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    # expert-parallel ('expert') vs tensor-parallel-inside-expert ('ffn')
+    if cfg.expert_sharding == "expert":
+        ax = ("experts", "embed", None)
+        ax_out = ("experts", None, "embed")
+    else:
+        ax = (None, "embed", "expert_ffn")
+        ax_out = (None, "expert_ffn", "embed")
+    defs = {
+        "router": ParamDef((d, e), ("embed", None)),
+        "w_gate": ParamDef((e, d, eff), ax),
+        "w_up": ParamDef((e, d, eff), ax),
+        "w_down": ParamDef((e, eff, d), ax_out),
+        "norm": ParamDef((d,), ("embed",), init="ones"),
+    }
+    if cfg.n_shared_experts:
+        sff = cfg.n_shared_experts * eff
+        defs.update({
+            "shared_gate": ParamDef((d, sff), ("embed", "ffn")),
+            "shared_up": ParamDef((d, sff), ("embed", "ffn")),
+            "shared_down": ParamDef((sff, d), ("ffn", "embed")),
+        })
+    return defs
+
+
+def _exclusive_cumsum(x):
+    return jnp.cumsum(x) - x
+
+
+def moe_mlp(cfg: ModelConfig, p: dict, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y, aux_loss).
+
+    Group-batched dropping MoE: tokens are split into G groups aligned with
+    the data-parallel sharding; routing, the stable sort, the capacity
+    scatter and the combine all carry the G batch dim, so GSPMD keeps every
+    buffer O(local_tokens) per device (a global argsort+gather would be
+    replicated — computed indices defeat sharding propagation). Capacity is
+    per group, as in expert-parallel deployments.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    g_ = 16 if t % 16 == 0 and t >= 16 else 1
+    tg = t // g_
+    xg = constrain(x.reshape(g_, tg, d), "batch", None, "embed")
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                 # (g,tg,k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balancing loss (Switch-style), computed globally
+    frac_tokens = jnp.mean(jax.nn.one_hot(top_i[..., 0], e), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+
+    rows = tg * k
+    capacity = int(-(-rows // e) * cfg.capacity_factor)
+    if rows // e < 8:
+        capacity = rows          # small-batch no-drop mode (decode path)
+    capacity = max(capacity, 4)
+
+    row_expert = top_i.reshape(g_, rows)
+    row_weight = top_w.reshape(g_, rows)
+    row_token = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(tg), k)[None], (g_, rows))
+
+    order = jnp.argsort(row_expert, axis=1, stable=True)
+    se = jnp.take_along_axis(row_expert, order, axis=1)
+    st = jnp.take_along_axis(row_token, order, axis=1)
+    sw = jnp.take_along_axis(row_weight, order, axis=1)
+
+    counts = jnp.zeros((g_, e), jnp.int32).at[
+        jnp.arange(g_)[:, None], se].add(1)
+    starts = jnp.cumsum(counts, axis=1) - counts
+    rank = jnp.arange(rows)[None] - jnp.take_along_axis(starts, se, axis=1)
+    keep = rank < capacity
+    slot = jnp.where(keep, se * capacity + rank, e * capacity)
+
+    # vmapped row gathers/scatters: index tensors stay (g, rows) — a plain
+    # take_along_axis/.at[] here broadcasts u32 indices to (g, rows, d)
+    gathered = jax.vmap(lambda xr, idx: xr[idx])(xg, st)        # (g,rows,d)
+    buf = jax.vmap(
+        lambda vals, sl: jnp.zeros((e * capacity + 1, d),
+                                   x.dtype).at[sl].set(vals))(gathered, slot)
+    h = buf[:, : e * capacity].reshape(g_, e, capacity, d)
+    h = constrain(h, "batch", "experts" if cfg.expert_sharding == "expert"
+                  else None, None, "embed")
+
+    wg = p["w_gate"].astype(x.dtype)
+    wu = p["w_up"].astype(x.dtype)
+    wd = p["w_down"].astype(x.dtype)
+    gact = jnp.einsum("gecd,edf->gecf", h, wg)
+    uact = jnp.einsum("gecd,edf->gecf", h, wu)
+    hidden = silu(gact) * uact
+    if cfg.expert_sharding == "expert":
+        hidden = constrain(hidden, "batch", "experts", None, None)
+    else:
+        hidden = constrain(hidden, "batch", None, None, "expert_ffn")
+    y_e = jnp.einsum("gecf,efd->gecd", hidden, wd)
+    y_e = constrain(y_e, "batch",
+                    "experts" if cfg.expert_sharding == "expert" else None,
+                    None, "embed")
+
+    yf = y_e.reshape(g_, e * capacity, d)
+    safe_slot = jnp.minimum(slot, e * capacity - 1)
+    y_rows = jax.vmap(lambda yr, idx: yr[idx])(yf, safe_slot)
+    y_rows = jnp.where(keep[..., None], y_rows, 0.0)
+    y_rows = y_rows * sw[..., None].astype(x.dtype)
+    out = jax.vmap(
+        lambda vals, idx: jnp.zeros((tg, d), x.dtype).at[idx].add(vals))(
+        y_rows, st)
+    out = out.reshape(b, s, d)
+
+    if cfg.n_shared_experts:
+        sh = {"w_gate": p["shared_gate"], "w_up": p["shared_up"],
+              "w_down": p["shared_down"]}
+        out = out + dense_mlp(sh, x)
+    return constrain(out, "batch", "seq", "embed"), aux.astype(jnp.float32)

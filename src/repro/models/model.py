@@ -1,0 +1,221 @@
+"""Model facade: one object per architecture with train / prefill / decode
+entry points, ParamDef trees (init, sharding specs, ShapeDtypeStructs), KV
+caches, and the stage-slicing API used by pipeline-parallel cold starts."""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+from repro.models.common import (ParamDef, cross_entropy, init_params,
+                                 map_defs, param_bytes, param_specs,
+                                 param_structs)
+
+AUX_LOSS_WEIGHT = 0.01
+Z_LOSS = 1e-4
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- params
+    @property
+    def defs(self) -> dict:
+        if self.cfg.is_encdec:
+            return encdec.encdec_defs(self.cfg)
+        return transformer.lm_defs(self.cfg)
+
+    def init(self, key):
+        return init_params(self.defs, key, _dtype(self.cfg))
+
+    def specs(self):
+        return param_specs(self.defs)
+
+    def structs(self):
+        return param_structs(self.defs, _dtype(self.cfg))
+
+    def bytes(self) -> int:
+        return param_bytes(self.defs, jnp.dtype(self.cfg.dtype).itemsize)
+
+    # ------------------------------------------------------------- inputs
+    def input_structs(self, batch: int, seq: int) -> dict:
+        cfg = self.cfg
+        out = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+        if cfg.family == "vlm":
+            out["patch_embeds"] = jax.ShapeDtypeStruct(
+                (batch, cfg.n_image_tokens, cfg.d_model), _dtype(cfg))
+        if cfg.is_encdec:
+            out["frames"] = jax.ShapeDtypeStruct(
+                (batch, cfg.n_audio_frames, cfg.d_model), _dtype(cfg))
+        return out
+
+    def dummy_inputs(self, key, batch: int, seq: int) -> dict:
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        out = {"tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab)}
+        if cfg.family == "vlm":
+            out["patch_embeds"] = jax.random.normal(
+                k2, (batch, cfg.n_image_tokens, cfg.d_model), _dtype(cfg)) * 0.02
+        if cfg.is_encdec:
+            out["frames"] = jax.random.normal(
+                k2, (batch, cfg.n_audio_frames, cfg.d_model), _dtype(cfg)) * 0.02
+        return out
+
+    # --------------------------------------------------------------- train
+    def loss(self, params, batch: dict, *, remat: str = "none"):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        if cfg.is_encdec:
+            memory = encdec.encode(cfg, params, batch["frames"])
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            h, _ = encdec.decoder(cfg, params, tokens, positions,
+                                  memory=memory, remat=remat,
+                                  dtype=_dtype(cfg))
+            logits = encdec.head(cfg, params, h)
+            labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)),
+                             constant_values=-1)
+            ce = cross_entropy(logits, labels, Z_LOSS)
+            return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+        prefix = batch.get("patch_embeds")
+        plen = prefix.shape[1] if prefix is not None else 0
+        total = plen + s
+        positions = jnp.broadcast_to(jnp.arange(total)[None], (b, total))
+        x = transformer.embed(cfg, params, tokens, positions,
+                              prefix_embeds=prefix, dtype=_dtype(cfg))
+        x, _, aux = transformer.run_blocks(cfg, params["blocks"], x,
+                                           positions, remat=remat)
+        logits = transformer.head(cfg, params, x)
+        logits = logits[:, plen:]
+        labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)), constant_values=-1)
+        ce = cross_entropy(logits, labels, Z_LOSS)
+        loss = ce + AUX_LOSS_WEIGHT * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------- serving
+    def init_cache(self, batch: int, max_seq: int, as_structs: bool = False):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        if cfg.is_encdec:
+            return {
+                "self": encdec.init_self_cache(cfg, batch, max_seq, dt,
+                                               as_structs),
+                "cross": (encdec.cross_kv_structs(cfg, batch, dt)
+                          if as_structs else None),
+            }
+        return transformer.init_cache(cfg, batch, max_seq, dt, as_structs)
+
+    def cache_axes(self):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            a = ("layers",) + ("batch", "kv_seq", "kv_heads", "head_dim")
+            c = ("layers", "batch", "seq", "kv_heads", "head_dim")
+            return {"self": {"k": a, "v": a}, "cross": {"k": c, "v": c}}
+        return transformer.cache_axes(cfg)
+
+    def prefill(self, params, batch: dict, max_seq: int, *,
+                remat: str = "none"):
+        """Full-prompt pass; returns (last-token logits (B,V), cache)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        if cfg.is_encdec:
+            memory = encdec.encode(cfg, params, batch["frames"])
+            cross_kv = encdec.precompute_cross_kv(cfg, params, memory)
+            cache = encdec.init_self_cache(cfg, b, max_seq, _dtype(cfg))
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            h, self_cache = encdec.decoder(cfg, params, tokens, positions,
+                                           cross_kv=cross_kv,
+                                           self_cache=cache, dtype=_dtype(cfg))
+            logits = encdec.head(cfg, params, h[:, -1:])
+            return logits[:, 0], {"self": self_cache, "cross": cross_kv}
+
+        prefix = batch.get("patch_embeds")
+        plen = prefix.shape[1] if prefix is not None else 0
+        total = plen + s
+        positions = jnp.broadcast_to(jnp.arange(total)[None], (b, total))
+        x = transformer.embed(cfg, params, tokens, positions,
+                              prefix_embeds=prefix, dtype=_dtype(cfg))
+        cache = transformer.init_cache(cfg, b, max_seq, _dtype(cfg))
+        x, cache, _ = transformer.run_blocks(cfg, params["blocks"], x,
+                                             positions, cache=cache,
+                                             remat=remat)
+        logits = transformer.head(cfg, params, x[:, -1:])
+        return logits[:, 0], cache
+
+    def decode_step(self, params, cache, tokens, positions):
+        """One decode step. tokens (B,1) int32; positions (B,1) — the cache
+        slot each new token is written to (attends to [0, pos])."""
+        cfg = self.cfg
+        if cfg.is_encdec:
+            h, self_cache = encdec.decoder(cfg, params, tokens, positions,
+                                           cross_kv=cache["cross"],
+                                           self_cache=cache["self"],
+                                           decode=True, dtype=_dtype(cfg))
+            logits = encdec.head(cfg, params, h)
+            return logits[:, 0], {"self": self_cache, "cross": cache["cross"]}
+        x = transformer.embed(cfg, params, tokens, positions,
+                              dtype=_dtype(cfg))
+        x, cache, _ = transformer.run_blocks(cfg, params["blocks"], x,
+                                             positions, cache=cache,
+                                             decode=True)
+        logits = transformer.head(cfg, params, x)
+        return logits[:, 0], cache
+
+    # ------------------------------------------ pipeline stages (the paper)
+    def stage_ranges(self, n_stages: int):
+        return transformer.stage_period_ranges(self.cfg.n_periods, n_stages)
+
+    def stage_defs(self, n_stages: int, stage: int) -> dict:
+        """ParamDef subtree a stage must fetch (drives byte accounting)."""
+        full = self.defs
+        p0, p1 = self.stage_ranges(n_stages)[stage]
+        out = {"blocks": map_defs(
+            lambda d: ParamDef((p1 - p0,) + d.shape[1:], d.axes, d.init,
+                               d.scale),
+            full["blocks"])}
+        if stage == 0:
+            out["embed"] = full["embed"]
+            if self.cfg.is_encdec:
+                out["encoder"] = full["encoder"]
+                out["enc_final_norm"] = full["enc_final_norm"]
+        if stage == n_stages - 1:
+            out["final_norm"] = full["final_norm"]
+            if "lm_head" in full:
+                out["lm_head"] = full["lm_head"]
+        return out
+
+    def stage_bytes(self, n_stages: int, stage: int) -> int:
+        return param_bytes(self.stage_defs(n_stages, stage),
+                           jnp.dtype(self.cfg.dtype).itemsize)
+
+    def slice_stage_params(self, params, n_stages: int, stage: int) -> dict:
+        """Materialize a stage's param slice from full params."""
+        p0, p1 = self.stage_ranges(n_stages)[stage]
+        out = {"blocks": transformer.slice_blocks(params["blocks"], p0, p1)}
+        if stage == 0:
+            out["embed"] = params["embed"]
+            if self.cfg.is_encdec:
+                out["encoder"] = params["encoder"]
+                out["enc_final_norm"] = params["enc_final_norm"]
+        if stage == n_stages - 1:
+            out["final_norm"] = params["final_norm"]
+            if "lm_head" in params:
+                out["lm_head"] = params["lm_head"]
+        return out
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

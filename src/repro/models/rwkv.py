@@ -1,0 +1,109 @@
+"""RWKV6 ('Finch') time-mix with data-dependent decay.
+
+Backbone fidelity: token-shift lerps + LoRA-parameterized decay + WKV6
+recurrence (via kernels.ops.wkv6) + gated output. The channel-mix MLP is the
+shared dense SwiGLU from mlp.py (noted simplification, DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.kernels import ops
+from repro.models.common import ParamDef, silu
+
+LORA_R = 64
+
+
+def rwkv_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h, hd = cfg.n_heads, cfg.head_dim
+    assert h * hd == d, "rwkv requires n_heads*head_dim == d_model"
+    return {
+        "mu_r": ParamDef((d,), ("embed",), init="ones", scale=0.5),
+        "mu_k": ParamDef((d,), ("embed",), init="ones"),
+        "mu_v": ParamDef((d,), ("embed",), init="ones"),
+        "mu_g": ParamDef((d,), ("embed",), init="ones"),
+        "mu_w": ParamDef((d,), ("embed",), init="ones"),
+        "w_r": ParamDef((d, d), ("embed", "heads")),
+        "w_k": ParamDef((d, d), ("embed", "heads")),
+        "w_v": ParamDef((d, d), ("embed", "heads")),
+        "w_g": ParamDef((d, d), ("embed", "heads")),
+        "w_o": ParamDef((d, d), ("heads", "embed")),
+        "decay_base": ParamDef((d,), ("embed",), init="zeros"),
+        "decay_A": ParamDef((d, LORA_R), ("embed", None)),
+        "decay_B": ParamDef((LORA_R, d), (None, "embed")),
+        "u": ParamDef((h, hd), ("heads", "head_dim"), init="zeros"),
+        "ln_w": ParamDef((d,), ("embed",), init="ones"),
+        "ln_b": ParamDef((d,), ("embed",), init="zeros"),
+        "norm": ParamDef((d,), ("embed",), init="ones"),
+    }
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype):
+    return {
+        "shift": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim),
+                         jnp.float32),
+    }
+
+
+RWKV_CACHE_AXES = {
+    "shift": ("batch", None, "embed"),
+    "wkv": ("batch", "heads", "head_dim", None),
+}
+
+
+def _token_shift(x, shift_state):
+    """Previous-token tensor: concat(state, x[:, :-1])."""
+    prev = jnp.concatenate([shift_state.astype(x.dtype), x[:, :-1]], axis=1)
+    return prev
+
+
+def _heads(x, h, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, h, hd)
+
+
+def rwkv_mixer(cfg: ModelConfig, p: dict, x, *, cache: Optional[dict] = None,
+               decode: bool = False) -> Tuple:
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    shift_state = (cache["shift"] if cache is not None
+                   else jnp.zeros((b, 1, d), x.dtype))
+    prev = _token_shift(x, shift_state)
+
+    def lerp(mu):
+        m = jax.nn.sigmoid(p[mu].astype(jnp.float32)).astype(x.dtype)
+        return x * m + prev * (1 - m)
+
+    xr, xk, xv, xg, xw = (lerp(m) for m in
+                          ("mu_r", "mu_k", "mu_v", "mu_g", "mu_w"))
+    r = _heads(jnp.einsum("bsd,de->bse", xr, p["w_r"].astype(x.dtype)), h, hd)
+    k = _heads(jnp.einsum("bsd,de->bse", xk, p["w_k"].astype(x.dtype)), h, hd)
+    v = _heads(jnp.einsum("bsd,de->bse", xv, p["w_v"].astype(x.dtype)), h, hd)
+    g = jnp.einsum("bsd,de->bse", xg, p["w_g"].astype(x.dtype))
+
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["decay_A"].astype(jnp.float32))
+    w = (p["decay_base"].astype(jnp.float32)
+         + lora @ p["decay_B"].astype(jnp.float32))        # (b,s,d)
+    w = _heads(w, h, hd)
+
+    state = cache["wkv"] if cache is not None else None
+    y, new_state = ops.wkv6(r, k, v, w, p["u"].astype(jnp.float32), state)
+
+    yf = y.reshape(b, s, d).astype(jnp.float32)
+    mean = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yn = (yf - mean) * jax.lax.rsqrt(var + 1e-5)
+    yn = yn * p["ln_w"].astype(jnp.float32) + p["ln_b"].astype(jnp.float32)
+    out = (yn.astype(x.dtype) * silu(g))
+    out = jnp.einsum("bse,ed->bsd", out, p["w_o"].astype(x.dtype))
+
+    new_cache = {"shift": x[:, -1:, :], "wkv": new_state}
+    return constrain(out, "batch", "seq", "embed"), new_cache

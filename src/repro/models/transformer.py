@@ -1,0 +1,258 @@
+"""Unified decoder LM over a repeated *period* of heterogeneous layers.
+
+A period is ``cfg.mixer_pattern`` (attn/mamba/rwkv slots) zipped with the MoE
+cadence ``cfg.mlp_pattern``; the full network is ``n_periods`` repetitions,
+executed with one ``lax.scan`` over stacked per-period params (small HLO,
+fast multi-pod compiles).  Pipeline-parallel cold starts slice the stacked
+axis — stage i owns periods [p0, p1) — via ``slice_blocks``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import mamba as mamba_mod
+from repro.models import mlp as mlp_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.common import ParamDef, rmsnorm, stack_defs
+
+
+def _period_plan(cfg: ModelConfig):
+    return [(mix, cfg.mlp_pattern[i % len(cfg.mlp_pattern)])
+            for i, mix in enumerate(cfg.mixer_pattern)]
+
+
+# ---------------------------------------------------------------------------
+# Param defs
+# ---------------------------------------------------------------------------
+
+
+def block_defs(cfg: ModelConfig) -> dict:
+    defs = {}
+    for i, (mix, mlp) in enumerate(_period_plan(cfg)):
+        slot = {}
+        if mix == "attn":
+            slot["mixer"] = attn.attn_defs(cfg)
+        elif mix == "mamba":
+            slot["mixer"] = mamba_mod.mamba_defs(cfg)
+        elif mix == "rwkv":
+            slot["mixer"] = rwkv_mod.rwkv_defs(cfg)
+        else:
+            raise ValueError(mix)
+        if mlp == "dense":
+            slot["mlp"] = mlp_mod.dense_mlp_defs(cfg)
+        elif mlp == "moe":
+            slot["mlp"] = mlp_mod.moe_defs(cfg)
+        defs[f"slot{i:02d}"] = slot
+    return defs
+
+
+def lm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    defs = {
+        "embed": {"tok": ParamDef((cfg.padded_vocab, d), ("vocab", "embed"))},
+        "blocks": stack_defs(block_defs(cfg), cfg.n_periods, "layers"),
+        "final_norm": ParamDef((d,), ("embed",), init="ones"),
+    }
+    if cfg.pos_embed == "learned":
+        defs["embed"]["pos"] = ParamDef((cfg.max_position, d), (None, "embed"))
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, cfg.padded_vocab), ("embed", "vocab"))
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Caches (stacked over periods on axis 0 for the scan)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype,
+               as_structs: bool = False, n_periods: Optional[int] = None):
+    np_ = n_periods if n_periods is not None else cfg.n_periods
+    mk = (lambda s, dt: jax.ShapeDtypeStruct(s, dt)) if as_structs \
+        else (lambda s, dt: jnp.zeros(s, dt))
+    cache = {}
+    d_in = cfg.mamba_expand * cfg.d_model
+    for i, (mix, _) in enumerate(_period_plan(cfg)):
+        slot = f"slot{i:02d}"
+        if mix == "attn":
+            shp = (np_, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+            cache[slot] = {"k": mk(shp, dtype), "v": mk(shp, dtype)}
+        elif mix == "mamba":
+            cache[slot] = {
+                "conv": mk((np_, batch, cfg.mamba_d_conv - 1, d_in), dtype),
+                "h": mk((np_, batch, d_in, cfg.mamba_d_state), jnp.float32),
+            }
+        elif mix == "rwkv":
+            cache[slot] = {
+                "shift": mk((np_, batch, 1, cfg.d_model), dtype),
+                "wkv": mk((np_, batch, cfg.n_heads, cfg.head_dim,
+                           cfg.head_dim), jnp.float32),
+            }
+    return cache
+
+
+def cache_axes(cfg: ModelConfig) -> dict:
+    axes = {}
+    for i, (mix, _) in enumerate(_period_plan(cfg)):
+        slot = f"slot{i:02d}"
+        if mix == "attn":
+            a = ("layers",) + attn.KV_CACHE_AXES[1:]
+            axes[slot] = {"k": a, "v": a}
+        elif mix == "mamba":
+            axes[slot] = {k: ("layers",) + v
+                          for k, v in mamba_mod.MAMBA_CACHE_AXES.items()}
+        elif mix == "rwkv":
+            axes[slot] = {k: ("layers",) + v
+                          for k, v in rwkv_mod.RWKV_CACHE_AXES.items()}
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def embed(cfg: ModelConfig, params: dict, tokens, positions,
+          prefix_embeds=None, dtype=None):
+    """tokens (B,S) -> x (B, [n_img+]S, d). prefix_embeds (B,P,d) optional."""
+    tok_w = params["embed"]["tok"]
+    x = jnp.take(tok_w, tokens, axis=0)
+    if dtype is not None:
+        x = x.astype(dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    if cfg.pos_embed == "learned":
+        pos_w = params["embed"]["pos"]
+        x = x + jnp.take(pos_w, positions, axis=0).astype(x.dtype)
+    return constrain(x, "batch", "seq", "embed")
+
+
+def head(cfg: ModelConfig, params: dict, x):
+    xn = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w = (params["embed"]["tok"].T if cfg.tie_embeddings
+         else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", xn, w.astype(xn.dtype))
+    if cfg.padded_vocab != cfg.vocab:      # mask padded vocab entries
+        pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad, jnp.asarray(-1e30, logits.dtype), logits)
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def _period_step(cfg: ModelConfig, pslice: dict, cslice, x, positions,
+                 decode: bool, causal: bool):
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {}
+    for i, (mix, mlp) in enumerate(_period_plan(cfg)):
+        slot = f"slot{i:02d}"
+        sp = pslice[slot]
+        c = cslice.get(slot) if cslice is not None else None
+        xin = rmsnorm(x, sp["mixer"]["norm"], cfg.norm_eps)
+        if mix == "attn":
+            kvc = (c["k"], c["v"]) if c is not None else None
+            y, nc = attn.self_attention(cfg, sp["mixer"], xin,
+                                        positions=positions, causal=causal,
+                                        kv_cache=kvc, decode=decode)
+            if nc is not None:
+                if isinstance(nc, tuple) and nc[0] == "append":
+                    # §Perf it.5: only the new token's K/V leave the scan;
+                    # run_blocks writes them into the cache once, after.
+                    new_cache[slot] = {"k_new": nc[1], "v_new": nc[2]}
+                else:
+                    new_cache[slot] = {"k": nc[0], "v": nc[1]}
+            elif c is not None:
+                new_cache[slot] = c
+        elif mix == "mamba":
+            y, nc = mamba_mod.mamba_mixer(cfg, sp["mixer"], xin, cache=c,
+                                          decode=decode)
+            if cslice is not None:
+                new_cache[slot] = nc
+        else:  # rwkv
+            y, nc = rwkv_mod.rwkv_mixer(cfg, sp["mixer"], xin, cache=c,
+                                        decode=decode)
+            if cslice is not None:
+                new_cache[slot] = nc
+        x = constrain(x + y, "batch", "act_seq", "embed")
+        if mlp is not None and "mlp" in sp:
+            xin = rmsnorm(x, sp["mlp"]["norm"], cfg.norm_eps)
+            if mlp == "dense":
+                y = mlp_mod.dense_mlp(sp["mlp"], xin)
+            else:
+                y, a = mlp_mod.moe_mlp(cfg, sp["mlp"], xin)
+                aux = aux + a
+            x = constrain(x + y, "batch", "act_seq", "embed")
+    return x, (new_cache if cslice is not None else None), aux
+
+
+def run_blocks(cfg: ModelConfig, blocks: dict, x, positions, *,
+               cache: Optional[dict] = None, decode: bool = False,
+               causal: bool = True, remat: str = "none"):
+    """Scan the stacked periods. ``blocks``/``cache`` leading dim = periods
+    (possibly a stage's slice). Returns (x, new_cache, aux_sum)."""
+
+    def step(carry, xs):
+        h, aux = carry
+        pslice, cslice = xs
+        h, new_c, a = _period_step(cfg, pslice, cslice, h, positions,
+                                   decode, causal)
+        return (h, aux + a), new_c
+
+    if remat == "full":
+        step = jax.checkpoint(step, prevent_cse=False)
+    elif remat == "dots":
+        step = jax.checkpoint(
+            step, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    (x, aux), new_cache = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)),
+                                       (blocks, cache))
+
+    if decode and cache is not None and new_cache:
+        # append-mode post-pass: one batched write of every layer's new
+        # token into the (donated) cache — the full cache never rode the
+        # scan carries (§Perf it.5)
+        pos = positions[:, 0]
+
+        def write(c, n):
+            def per_period(cp, np_):
+                def per_batch(cb, nb, p):
+                    return jax.lax.dynamic_update_slice(
+                        cb, nb.astype(cb.dtype), (p, 0, 0))
+                return jax.vmap(per_batch)(cp, np_, pos)
+            return jax.vmap(per_period)(c, n)
+
+        for slot, val in list(new_cache.items()):
+            if isinstance(val, dict) and "k_new" in val:
+                new_cache[slot] = {
+                    "k": write(cache[slot]["k"], val["k_new"]),
+                    "v": write(cache[slot]["v"], val["v_new"]),
+                }
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stage slicing (pipeline-parallel cold starts)
+# ---------------------------------------------------------------------------
+
+
+def slice_blocks(params_or_cache, p0: int, p1: int):
+    """Slice the stacked period axis [p0, p1) of a blocks/cache tree."""
+    return jax.tree.map(lambda a: a[p0:p1], params_or_cache)
+
+
+def stage_period_ranges(n_periods: int, n_stages: int):
+    """Balanced contiguous period ranges, one per pipeline stage."""
+    base, rem = divmod(n_periods, n_stages)
+    ranges, start = [], 0
+    for i in range(n_stages):
+        size = base + (1 if i < rem else 0)
+        ranges.append((start, start + size))
+        start += size
+    return ranges

@@ -1,0 +1,76 @@
+"""Paged-KV block bookkeeping (vLLM-style block manager).
+
+The engine computes against slot-contiguous caches (CPU-scale models);
+the BlockManager tracks the *paged* accounting the paper's KV-migration
+queries (§6.2: "query the cache block manager to obtain the blocks used by
+existing requests") and provides byte counts for migration costs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class BlockTable:
+    request_id: int
+    blocks: List[int] = field(default_factory=list)
+    length: int = 0                  # tokens written
+
+
+class BlockManager:
+    def __init__(self, n_blocks: int, block_size: int,
+                 bytes_per_token: int):
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self.bytes_per_token = bytes_per_token
+        self._free: List[int] = list(range(n_blocks - 1, -1, -1))
+        self.tables: Dict[int, BlockTable] = {}
+
+    # ------------------------------------------------------------ alloc
+    def can_allocate(self, n_tokens: int) -> bool:
+        need = -(-n_tokens // self.block_size)
+        return len(self._free) >= need
+
+    def allocate(self, request_id: int, n_tokens: int) -> BlockTable:
+        need = -(-n_tokens // self.block_size)
+        if len(self._free) < need:
+            raise MemoryError("out of KV blocks")
+        t = BlockTable(request_id, [self._free.pop() for _ in range(need)],
+                       n_tokens)
+        self.tables[request_id] = t
+        return t
+
+    def extend(self, request_id: int, n_tokens: int = 1):
+        t = self.tables[request_id]
+        new_len = t.length + n_tokens
+        need = -(-new_len // self.block_size) - len(t.blocks)
+        for _ in range(need):
+            if not self._free:
+                raise MemoryError("out of KV blocks")
+            t.blocks.append(self._free.pop())
+        t.length = new_len
+
+    def free(self, request_id: int):
+        t = self.tables.pop(request_id, None)
+        if t:
+            self._free.extend(reversed(t.blocks))
+
+    # ---------------------------------------------------------- queries
+    def blocks_of(self, request_ids) -> List[int]:
+        out = []
+        for rid in request_ids:
+            t = self.tables.get(rid)
+            if t:
+                out.extend(t.blocks)
+        return out
+
+    def migration_bytes(self, request_ids, n_layers: int) -> int:
+        """Bytes to move when migrating these requests' KV (all layers)."""
+        blocks = self.blocks_of(request_ids)
+        return len(blocks) * self.block_size * self.bytes_per_token * n_layers
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)

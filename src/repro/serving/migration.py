@@ -1,0 +1,35 @@
+"""KV-cache migration (§6.2): gather per-stage caches to a single worker.
+
+In the engine the gather is a period-axis concatenation of the stage caches
+(paper: blocks collected with a gather primitive and 'placed at different
+layers, according to which worker it comes from')."""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_stage_caches(stage_caches: List[dict]) -> dict:
+    """Concatenate stage cache trees along the leading (period) axis."""
+    out = {}
+    keys = stage_caches[0].keys()
+    for k in keys:
+        sub = [c[k] for c in stage_caches]
+        out[k] = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *sub)
+    return out
+
+
+def migration_bytes(stage_caches: List[dict], request_slots,
+                    lengths) -> int:
+    """Bytes that cross the network in a scale-down migration: every stage
+    except the target ships its slots' live KV/state."""
+    total = 0
+    for c in stage_caches[1:]:
+        for leaf in jax.tree.leaves(c):
+            # per-slot share of the cache, only live slots move
+            per_slot = leaf.nbytes // max(leaf.shape[1], 1)
+            total += per_slot * len(request_slots)
+    return total

@@ -1,0 +1,681 @@
+"""End-to-end serverless LLM serving simulation.
+
+Runs the paper's three systems over the same cluster / workload:
+
+  * ``hydra``          — ParaServe/HydraServe: Alg.1 + Alg.2 + worker-level
+                         overlapping + pipeline consolidation (+cache opt).
+  * ``vllm``           — serverless vLLM baseline: single worker, first-fit
+                         placement, fully sequential cold-start stages.
+  * ``serverlessllm``  — pre-created containers, host-memory model cache with
+                         loading-optimized checkpoints, locality placement.
+
+Compute latencies use the paper's own predictor terms (t_p scaled by prompt
+length, t_d per token, t_n per pipeline hop); fetch times come from the
+contention-aware fair-share NIC fluid model in cluster/cluster.py.
+Worker failures can be injected; recovery is a fresh (pipeline-parallel)
+cold start — see DESIGN.md §7.
+"""
+
+from __future__ import annotations
+
+import collections
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.cluster.cluster import Cluster, Flow
+from repro.cluster.sim import EventSim
+from repro.core.coldstart import OverlapFlags
+from repro.core.controller import CentralController
+from repro.core.parallelism import NoPlacement
+from repro.core.types import GB, ColdStartScheme, ModelProfile, ServerSpec
+from repro.workloads.generator import ModelInstance, Request
+
+KV_BYTES_PER_TOKEN = 512 * 1024      # Llama2-7B-class fp16 KV per token
+BG_FETCH_WEIGHT = 0.5                # background (consolidation) fetch priority
+
+
+@dataclass
+class Worker:
+    wid: str
+    model: str
+    base_model: str
+    server_id: str
+    device: object
+    hbm: int
+    full_memory: bool
+    state: str = "cold"              # cold|pipeline|standalone|dead
+    stage: int = 0
+    group: Optional["Group"] = None
+    ready_time: Optional[float] = None
+    active: List[Request] = field(default_factory=list)
+    keepalive_ev: object = None
+    bg_flow: Optional[Flow] = None
+    bg_done: bool = False
+    fetch_flow: Optional[Flow] = None
+
+
+@dataclass
+class Group:
+    gid: int
+    model: str
+    scheme: ColdStartScheme
+    workers: List[Worker]
+    mode: str                        # consolidation mode: 'down'|'up'|'none'
+    ready: bool = False
+    dissolved: bool = False
+    active: List[Request] = field(default_factory=list)
+    keepalive_ev: object = None
+
+    @property
+    def s(self):
+        return self.scheme.s
+
+    @property
+    def w(self):
+        return self.scheme.w
+
+
+class ServerlessSim:
+    def __init__(self, servers: Sequence[ServerSpec],
+                 profiles: Dict[str, ModelProfile],
+                 instances: Sequence[ModelInstance],
+                 system: str = "hydra",
+                 cache_enabled: bool = False,
+                 flags: Optional[OverlapFlags] = None,
+                 max_batch: int = 8,
+                 keepalive_s: float = 300.0,
+                 consolidate: bool = True,
+                 force_s: Optional[int] = None,
+                 host_mem_bytes: int = 188 * GB,
+                 stage_bytes_fn: Optional[Callable] = None):
+        assert system in ("hydra", "vllm", "serverlessllm")
+        self.system = system
+        self.cache_enabled = cache_enabled or system == "serverlessllm"
+        self.sim = EventSim()
+        self.cluster = Cluster(self.sim, list(servers), host_mem_bytes)
+        self.controller = CentralController(
+            {s.server_id: s for s in servers},
+            per_worker_capacity=max_batch,
+            overlapped=(system == "hydra"))
+        self.max_batch = max_batch
+        self.keepalive_s = keepalive_s
+        self.consolidate = consolidate and system == "hydra"
+        self.force_s = force_s
+        self.stage_bytes_fn = stage_bytes_fn
+
+        if flags is not None:
+            self.flags = flags
+        elif system == "hydra":
+            self.flags = OverlapFlags.all()
+        else:
+            self.flags = OverlapFlags.none()
+
+        self.instances = {i.name: i for i in instances}
+        # every instance is its own model in the registry (its bytes must be
+        # fetched separately), sharing the base model's timing profile
+        for inst in instances:
+            base = profiles[inst.base_model]
+            self.controller.register_model(ModelProfile(
+                name=inst.name, size_bytes=base.size_bytes,
+                timings=base.timings,
+                slo=type(base.slo)(inst.slo_ttft, inst.slo_tpot),
+                max_pp=1 if system != "hydra" else base.max_pp,
+                full_hbm_bytes=base.full_hbm_bytes))
+
+        self.queues: Dict[str, collections.deque] = collections.defaultdict(
+            collections.deque)
+        self.warm_workers: Dict[str, List[Worker]] = collections.defaultdict(list)
+        self.groups: Dict[str, List[Group]] = collections.defaultdict(list)
+        self.provisioning: Dict[str, int] = collections.defaultdict(int)
+
+        self._wid = itertools.count()
+        self._gid = itertools.count()
+        self.finished: List[Request] = []
+        self.cold_start_log: List[dict] = []
+        self.failures_injected = 0
+        self._retry_pending: set = set()
+
+    # ================================================================ util
+    def _profile(self, model: str) -> ModelProfile:
+        return self.controller.models[model]
+
+    def _prefill_time(self, model: str, prompt_tokens: int, s: int, w: int
+                      ) -> float:
+        t = self._profile(model).timings
+        base = t.t_p * (prompt_tokens / 1024.0)
+        if s <= 1:
+            return base
+        return base * (s - w + w / s) + t.t_n * s
+
+    def _tpot(self, model: str, s: int, w: int) -> float:
+        t = self._profile(model).timings
+        if s <= 1:
+            return t.t_d
+        return t.t_d * (s - w + w / s) + t.t_n * s
+
+    # ============================================================ requests
+    def submit(self, requests: Sequence[Request]):
+        for r in requests:
+            self.sim.at(r.arrival, lambda r=r: self._arrive(r))
+
+    def run(self, until: Optional[float] = None):
+        self.sim.run(until=until)
+
+    def _arrive(self, req: Request):
+        self.controller.record_request(req.model, self.sim.now)
+        self.queues[req.model].append(req)
+        self._drain(req.model)
+        self._maybe_cold_start(req.model)
+
+    def _drain(self, model: str):
+        """Assign queued requests to endpoints with spare capacity."""
+        q = self.queues[model]
+        if not q:
+            return
+        for wkr in list(self.warm_workers[model]):
+            while q and len(wkr.active) < self.max_batch:
+                self._start_on_worker(wkr, q.popleft())
+        for grp in self.groups[model]:
+            if not grp.ready or grp.dissolved:
+                continue
+            while q and len(grp.active) < self.max_batch:
+                self._start_on_group(grp, q.popleft())
+
+    # ------------------------------------------------------------- serving
+    def _start_on_worker(self, wkr: Worker, req: Request):
+        wkr.active.append(req)
+        self._cancel_keepalive(wkr)
+        pf = self._prefill_time(req.model, req.prompt_tokens, 1, 1)
+        first = self.sim.now + pf
+        req.first_token = first
+        tpot = self._tpot(req.model, 1, 1)
+        dur = pf + max(req.output_tokens - 1, 0) * tpot
+        req._rate = tpot                     # type: ignore[attr-defined]
+        req._holder = wkr                    # type: ignore[attr-defined]
+        req._done_ev = self.sim.after(       # type: ignore[attr-defined]
+            dur, lambda: self._complete_on_worker(wkr, req))
+
+    def _complete_on_worker(self, wkr: Worker, req: Request):
+        if req in wkr.active:
+            wkr.active.remove(req)
+        req.completion = self.sim.now
+        self.finished.append(req)
+        self._drain(req.model)
+        if not wkr.active:
+            self._arm_keepalive(wkr)
+
+    def _start_on_group(self, grp: Group, req: Request):
+        grp.active.append(req)
+        self._cancel_group_keepalive(grp)
+        pf = self._prefill_time(req.model, req.prompt_tokens, grp.s, grp.w)
+        req.first_token = self.sim.now + pf
+        tpot = self._tpot(req.model, grp.s, grp.w)
+        req._rate = tpot                     # type: ignore[attr-defined]
+        req._holder = grp                    # type: ignore[attr-defined]
+        dur = pf + max(req.output_tokens - 1, 0) * tpot
+        req._done_ev = self.sim.after(       # type: ignore[attr-defined]
+            dur, lambda: self._complete_on_group(grp, req))
+
+    def _complete_on_group(self, grp: Group, req: Request):
+        if req in grp.active:
+            grp.active.remove(req)
+        req.completion = self.sim.now
+        self.finished.append(req)
+        self._drain(req.model)
+        if not grp.active and not grp.dissolved:
+            self._arm_group_keepalive(grp)
+
+    # ----------------------------------------------------------- keepalive
+    def _arm_keepalive(self, wkr: Worker):
+        self._cancel_keepalive(wkr)
+        wkr.keepalive_ev = self.sim.after(
+            self.keepalive_s, lambda: self._terminate_worker(wkr))
+
+    def _cancel_keepalive(self, wkr: Worker):
+        if wkr.keepalive_ev is not None:
+            self.sim.cancel(wkr.keepalive_ev)
+            wkr.keepalive_ev = None
+
+    def _arm_group_keepalive(self, grp: Group):
+        self._cancel_group_keepalive(grp)
+        grp.keepalive_ev = self.sim.after(
+            self.keepalive_s, lambda: self._terminate_group(grp))
+
+    def _cancel_group_keepalive(self, grp: Group):
+        if grp.keepalive_ev is not None:
+            self.sim.cancel(grp.keepalive_ev)
+            grp.keepalive_ev = None
+
+    def _terminate_worker(self, wkr: Worker):
+        if wkr.active or wkr.state == "dead":
+            return
+        wkr.state = "dead"
+        server = self.cluster.servers[wkr.server_id]
+        server.free(wkr.device, wkr.hbm)
+        if wkr in self.warm_workers[wkr.model]:
+            self.warm_workers[wkr.model].remove(wkr)
+
+    def _terminate_group(self, grp: Group):
+        if grp.active or grp.dissolved:
+            return
+        grp.dissolved = True
+        for wkr in grp.workers:
+            if wkr.bg_flow is not None and not wkr.bg_flow.done:
+                self.cluster.cancel_fetch(wkr.bg_flow)
+            wkr.active = []
+            self._terminate_worker(wkr)
+        if grp in self.groups[grp.model]:
+            self.groups[grp.model].remove(grp)
+
+    # ========================================================== cold start
+    def _capacity_in_flight(self, model: str) -> int:
+        cap = 0
+        for wkr in self.warm_workers[model]:
+            cap += self.max_batch - len(wkr.active)
+        for grp in self.groups[model]:
+            if not grp.dissolved:
+                cap += self.max_batch - len(grp.active)
+        cap += self.provisioning[model] * self.max_batch
+        return cap
+
+    def _maybe_cold_start(self, model: str):
+        qlen = len(self.queues[model])
+        if qlen == 0 or qlen <= self._capacity_in_flight(model):
+            return
+        try:
+            if self.system == "hydra":
+                self._cold_start_hydra(model)
+            else:
+                self._cold_start_baseline(model)
+        except NoPlacement:
+            if not self._evict_idle():
+                self._schedule_retry(model)
+                return
+            try:
+                if self.system == "hydra":
+                    self._cold_start_hydra(model)
+                else:
+                    self._cold_start_baseline(model)
+            except NoPlacement:
+                self._schedule_retry(model)
+
+    def _evict_idle(self) -> bool:
+        """HBM pressure relief: terminate one idle warm worker (LRU-ish) or
+        one idle group so a queued model can cold-start."""
+        for model, workers in self.warm_workers.items():
+            for wkr in workers:
+                if not wkr.active and not self.queues[model]:
+                    self._cancel_keepalive(wkr)
+                    self._terminate_worker(wkr)
+                    return True
+        for model, groups in self.groups.items():
+            for grp in groups:
+                if grp.ready and not grp.active and not self.queues[model]:
+                    self._cancel_group_keepalive(grp)
+                    self._terminate_group(grp)
+                    return True
+        return False
+
+    def _schedule_retry(self, model: str):
+        if model in self._retry_pending:
+            return
+        self._retry_pending.add(model)
+
+        def retry():
+            self._retry_pending.discard(model)
+            self._maybe_cold_start(model)
+
+        self.sim.after(1.0, retry)
+
+    # --------------------------------------------------------------- hydra
+    def _cold_start_hydra(self, model: str):
+        now = self.sim.now
+        current = len(self.warm_workers[model]) + sum(
+            1 for g in self.groups[model] if not g.dissolved)
+        plan = self.controller.consolidation_plan(
+            model, len(self.queues[model]), now, current)
+        scheme = self.controller.plan_cold_start(
+            model, self.cluster.free_hbm(), now, force_s=self.force_s)
+        mode = plan.mode if self.consolidate else "none"
+        n_groups = max(1, len(plan.group_sizes)) if mode == "up" else 1
+        for _ in range(n_groups):
+            scheme = self.controller.plan_cold_start(
+                model, self.cluster.free_hbm(), now, force_s=self.force_s)
+            self._launch_group(model, scheme, mode)
+
+    def _launch_group(self, model: str, scheme: ColdStartScheme, mode: str):
+        now = self.sim.now
+        prof = self._profile(model)
+        gid = next(self._gid)
+        workers: List[Worker] = []
+        stage_bytes = self._stage_bytes(model, scheme.s)
+        for i, sid in enumerate(scheme.servers):
+            full = i < scheme.w
+            need = prof.hbm_full() if full else prof.hbm_low(scheme.s)
+            server = self.cluster.servers[sid]
+            dev = server.fit_device(need)
+            if dev is None:          # raced out of memory — retry smaller
+                need = prof.hbm_low(scheme.s)
+                dev = server.fit_device(need)
+                if dev is None:
+                    continue
+                full = False
+            server.alloc(dev, need)
+            wkr = Worker(wid=f"w{next(self._wid)}", model=model,
+                         base_model=self.instances[model].base_model,
+                         server_id=sid, device=dev, hbm=need,
+                         full_memory=full, stage=i)
+            workers.append(wkr)
+        if not workers:
+            self._schedule_retry(model)
+            return
+        grp = Group(gid, model, scheme, workers, mode)
+        for wkr in workers:
+            wkr.group = grp
+        self.groups[model].append(grp)
+        self.provisioning[model] += 1
+
+        worker_ids = [w.wid for w in workers]
+        self.controller.admit_fetches(model, scheme, worker_ids,
+                                      stage_bytes[: len(workers)], now)
+        t = prof.timings
+        pending = {"n": len(workers)}
+        t0 = now
+
+        for wkr, nbytes in zip(workers, stage_bytes):
+            self._provision_worker(wkr, nbytes, t, t0, pending, grp)
+
+    def _stage_bytes(self, model: str, s: int) -> List[int]:
+        prof = self._profile(model)
+        if self.stage_bytes_fn is not None:
+            return [self.stage_bytes_fn(self.instances[model].base_model,
+                                        s, i) for i in range(s)]
+        return [prof.size_bytes // s] * s
+
+    def _provision_worker(self, wkr: Worker, nbytes: int, t, t0: float,
+                          pending: dict, grp: Group):
+        """Run the worker-level overlapped cold-start stages with the
+        contention-accurate fetch (see core/coldstart.py for the analytic
+        twin of this logic)."""
+        server = self.cluster.servers[wkr.server_id]
+        flags = self.flags
+        cached = self.cache_enabled and server.cache_has(wkr.model)
+        load_seconds = nbytes / server.spec.pcie_bytes_per_s
+
+        if flags.overlap_load:
+            runtime_end = t0 + t.t_cc + t.t_cu
+            lib_end = runtime_end + t.t_l
+        else:
+            lib_end = t0 + t.t_cc + t.t_l
+            runtime_end = lib_end + t.t_cu
+
+        if self.system == "serverlessllm":
+            # containers pre-created, libraries resident
+            runtime_end = t0 + t.t_cu
+            lib_end = runtime_end
+
+        def after_fetch(fetch_end: float):
+            if self.cache_enabled:
+                server.cache_put(wkr.model, int(nbytes))
+            load_begin = max(runtime_end, t0 if flags.prefetch else fetch_end)
+            if flags.stream:
+                load_end = max(fetch_end, load_begin + load_seconds)
+            else:
+                load_end = max(fetch_end, load_begin) + load_seconds
+            ready = max(load_end, lib_end)
+            self.controller.fetch_complete(wkr.server_id, wkr.wid,
+                                           self.sim.now)
+            self.sim.at(ready, lambda: self._worker_ready(wkr, grp, pending,
+                                                          ready))
+
+        if cached:
+            # host cache hit: no network fetch, load from host memory
+            self.sim.at(max(runtime_end, t0),
+                        lambda: after_fetch(self.sim.now))
+            server.cache_touch(wkr.model)
+            return
+
+        fetch_start = t0 if flags.prefetch else runtime_end
+        if self.system == "serverlessllm":
+            fetch_start = runtime_end
+
+        def start_flow():
+            wkr.fetch_flow = self.cluster.start_fetch(
+                wkr.server_id, nbytes,
+                lambda: after_fetch(self.sim.now))
+
+        self.sim.at(fetch_start, start_flow)
+
+    def _worker_ready(self, wkr: Worker, grp: Group, pending: dict,
+                      ready: float):
+        if wkr.state == "dead":
+            return
+        wkr.state = "pipeline" if grp.scheme.s > 1 else "standalone"
+        wkr.ready_time = ready
+        pending["n"] -= 1
+        if pending["n"] == 0:
+            self._group_ready(grp)
+
+    def _group_ready(self, grp: Group):
+        grp.ready = True
+        self.provisioning[grp.model] -= 1
+        self.cold_start_log.append({
+            "model": grp.model, "s": grp.s, "w": grp.w,
+            "ready": self.sim.now,
+            "predicted_ttft": grp.scheme.predicted_ttft,
+        })
+        if grp.s == 1:
+            # single worker: promote immediately to the warm pool
+            wkr = grp.workers[0]
+            wkr.state = "standalone"
+            wkr.group = None
+            self.warm_workers[grp.model].append(wkr)
+            grp.dissolved = True
+            self.groups[grp.model].remove(grp)
+            self._drain(grp.model)
+            if not wkr.active:
+                self._arm_keepalive(wkr)
+            return
+        self._drain(grp.model)
+        if self.consolidate and grp.mode in ("down", "up"):
+            self._start_consolidation(grp)
+        if not grp.active:
+            self._arm_group_keepalive(grp)
+
+    # ====================================================== consolidation
+    def _start_consolidation(self, grp: Group):
+        prof = self._profile(grp.model)
+        total = prof.size_bytes
+        stage_bytes = self._stage_bytes(grp.model, grp.s)
+        if grp.mode == "up":
+            targets = grp.workers
+        else:
+            # scale-down: the target must be upgradable to full memory
+            targets = [w for w in grp.workers
+                       if w.full_memory
+                       or w.device.hbm_free >= prof.hbm_full() - w.hbm][:1]
+        for wkr in targets:
+            rest = total - stage_bytes[min(wkr.stage, len(stage_bytes) - 1)]
+            server = self.cluster.servers[wkr.server_id]
+            # upgrade a low-memory worker's reservation to full
+            if not wkr.full_memory:
+                extra = prof.hbm_full() - wkr.hbm
+                if wkr.device.hbm_free >= extra:
+                    server.alloc(wkr.device, extra)
+                    wkr.hbm += extra
+                    wkr.full_memory = True
+                else:
+                    continue        # cannot upgrade now; stay in pipeline
+            wkr.bg_flow = self.cluster.start_fetch(
+                wkr.server_id, rest,
+                lambda wkr=wkr: self._bg_fetch_done(grp, wkr),
+                weight=BG_FETCH_WEIGHT)
+
+    def _bg_fetch_done(self, grp: Group, wkr: Worker):
+        wkr.bg_done = True
+        if grp.dissolved:
+            return
+        if grp.mode == "down":
+            self._consolidate_down(grp, wkr)
+        else:
+            if all(w.bg_done or not w.full_memory for w in grp.workers):
+                self._consolidate_up(grp)
+
+    def _migration_seconds(self, grp: Group) -> float:
+        kv_bytes = sum(r.prompt_tokens + self._tokens_done(r)
+                       for r in grp.active) * KV_BYTES_PER_TOKEN
+        # gathered over (s-1) source workers in parallel, streamed
+        bw = min(self.cluster.servers[w.server_id].spec.nic_bytes_per_s
+                 for w in grp.workers)
+        frac = (grp.s - 1) / grp.s
+        return 0.02 + kv_bytes * frac / bw
+
+    def _tokens_done(self, req: Request) -> int:
+        if req.first_token is None or self.sim.now <= req.first_token:
+            return 0
+        rate = getattr(req, "_rate", None) or 1e9
+        return min(int((self.sim.now - req.first_token) / rate) + 1,
+                   req.output_tokens)
+
+    def _consolidate_down(self, grp: Group, wkr: Worker):
+        """Migrate KV to `wkr`, retime ongoing requests at standalone rate,
+        terminate the other stages (Fig. 4(c) / Fig. 13)."""
+        mig = self._migration_seconds(grp)
+
+        def finish():
+            if grp.dissolved:
+                return
+            grp.dissolved = True
+            now = self.sim.now
+            for req in list(grp.active):
+                self._retime(req, wkr, now)
+            wkr.active = list(grp.active)
+            grp.active = []
+            wkr.state = "standalone"
+            wkr.group = None
+            self.warm_workers[grp.model].append(wkr)
+            for other in grp.workers:
+                if other is not wkr:
+                    other.active = []
+                    self._terminate_worker(other)
+            if grp in self.groups[grp.model]:
+                self.groups[grp.model].remove(grp)
+            self._drain(grp.model)
+            if not wkr.active:
+                self._arm_keepalive(wkr)
+
+        self.sim.after(mig, finish)
+
+    def _consolidate_up(self, grp: Group):
+        """Every stage becomes a standalone replica (Fig. 4(d) / Fig. 7)."""
+        if grp.dissolved:
+            return
+        grp.dissolved = True
+        now = self.sim.now
+        first = grp.workers[0]
+        mig = self._migration_seconds(grp)
+        for req in list(grp.active):
+            self._retime(req, first, now + mig)
+        first.active = list(grp.active)
+        grp.active = []
+        for wkr in grp.workers:
+            if not wkr.bg_done:     # couldn't upgrade: terminate
+                wkr.active = []
+                self._terminate_worker(wkr)
+                continue
+            wkr.state = "standalone"
+            wkr.group = None
+            self.warm_workers[grp.model].append(wkr)
+            if not wkr.active:
+                self._arm_keepalive(wkr)
+        if grp in self.groups[grp.model]:
+            self.groups[grp.model].remove(grp)
+        self._drain(grp.model)
+
+    def _retime(self, req: Request, wkr: Worker, effective_at: float):
+        """Re-schedule a request's completion at the standalone decode rate
+        from `effective_at` on (KV already migrated)."""
+        ev = getattr(req, "_done_ev", None)
+        if ev is not None:
+            self.sim.cancel(ev)
+        done = self._tokens_done(req)
+        remaining = max(req.output_tokens - done, 0)
+        new_rate = self._tpot(req.model, 1, 1)
+        finish_at = max(effective_at, self.sim.now) + remaining * new_rate
+        # effective tpot improves from the migration point (Fig. 13)
+        req._rate = new_rate                  # type: ignore[attr-defined]
+        req._holder = wkr                     # type: ignore[attr-defined]
+        req._done_ev = self.sim.at(           # type: ignore[attr-defined]
+            finish_at, lambda: self._complete_on_worker(wkr, req))
+
+    # ============================================================ baseline
+    def _cold_start_baseline(self, model: str):
+        now = self.sim.now
+        prof = self._profile(model)
+        sid = self._place_single(model, prof)
+        if sid is None:
+            raise NoPlacement(model)
+        scheme = ColdStartScheme(1, 1, (sid,), 0.0, prof.timings.t_d, False)
+        self._launch_group(model, scheme, "none")
+
+    def _place_single(self, model: str, prof: ModelProfile) -> Optional[str]:
+        servers = self.cluster.servers
+        if self.system == "serverlessllm":
+            for sid, s in servers.items():
+                if s.cache_has(model) and s.fit_device(prof.hbm_full()):
+                    return sid
+        for sid, s in servers.items():       # first-fit (serverless vLLM)
+            if s.fit_device(prof.hbm_full()):
+                return sid
+        return None
+
+    # ============================================================ failures
+    def inject_failure(self, model: str):
+        """Kill one running worker of `model`; requests are re-queued and a
+        fresh cold start is triggered (recovery path == cold-start path)."""
+        victims = self.warm_workers[model] or [
+            w for g in self.groups[model] for w in g.workers]
+        if not victims:
+            return False
+        wkr = victims[0]
+        self.failures_injected += 1
+        requeue = list(wkr.active)
+        if wkr.group is not None:
+            grp = wkr.group
+            requeue = list(grp.active)
+            for r in requeue:
+                ev = getattr(r, "_done_ev", None)
+                self.sim.cancel(ev)
+                r.first_token = None
+            grp.active = []
+            self._terminate_group(grp)
+        else:
+            for r in requeue:
+                ev = getattr(r, "_done_ev", None)
+                self.sim.cancel(ev)
+                r.first_token = None
+            wkr.active = []
+            self._terminate_worker(wkr)
+        for r in requeue:
+            self.queues[model].appendleft(r)
+        self._maybe_cold_start(model)
+        return True
+
+    # ============================================================= metrics
+    def metrics(self) -> dict:
+        done = self.finished
+        if not done:
+            return {"n": 0}
+        ttft_ok = sum(1 for r in done if r.ttft_ok())
+        tpot_ok = sum(1 for r in done if r.tpot_ok())
+        ttfts = sorted(r.ttft for r in done)
+        return {
+            "n": len(done),
+            "ttft_attainment": ttft_ok / len(done),
+            "tpot_attainment": tpot_ok / len(done),
+            "ttft_mean": sum(ttfts) / len(ttfts),
+            "ttft_p50": ttfts[len(ttfts) // 2],
+            "ttft_p99": ttfts[min(len(ttfts) - 1, int(len(ttfts) * 0.99))],
+            "cold_starts": len(self.cold_start_log),
+        }

@@ -1,0 +1,101 @@
+"""Stage worker: holds one pipeline stage's parameter slice and the KV/state
+cache for its periods; executes stage-local prefill/decode with jitted fns.
+
+Decoder-only families. Encoder-decoder (whisper) serves single-worker —
+see DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.models.model import Model
+
+
+class StageWorker:
+    def __init__(self, cfg: ModelConfig, stage_params: dict, n_stages: int,
+                 stage: int, max_batch: int, max_seq: int):
+        assert not cfg.is_encdec or n_stages == 1, \
+            "enc-dec serves single-worker (DESIGN.md §5)"
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.n_stages = n_stages
+        self.stage = stage
+        self.first = stage == 0
+        self.last = stage == n_stages - 1
+        p0, p1 = self.model.stage_ranges(n_stages)[stage]
+        self.periods = (p0, p1)
+        self.params = stage_params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        dt = jnp.dtype(cfg.dtype)
+        self.cache = transformer.init_cache(cfg, max_batch, max_seq, dt,
+                                            n_periods=p1 - p0)
+        self._prefill_fn = jax.jit(self._prefill_impl,
+                                   static_argnames=("with_prefix",))
+        self._decode_fn = jax.jit(self._decode_impl)
+
+    # ----------------------------------------------------------- impl fns
+    def _prefill_impl(self, params, x_in, positions, fresh_cache,
+                      prefix_embeds=None, *, with_prefix=False):
+        cfg = self.cfg
+        if self.first:
+            x = transformer.embed(cfg, params, x_in, positions,
+                                  prefix_embeds=prefix_embeds
+                                  if with_prefix else None,
+                                  dtype=jnp.dtype(cfg.dtype))
+        else:
+            x = x_in
+        x, new_cache, _ = transformer.run_blocks(
+            cfg, params["blocks"], x, positions, cache=fresh_cache)
+        out = transformer.head(cfg, params, x[:, -1:]) if self.last else x
+        return out, new_cache
+
+    def _decode_impl(self, params, x_in, positions, cache):
+        cfg = self.cfg
+        if self.first:
+            x = transformer.embed(cfg, params, x_in, positions,
+                                  dtype=jnp.dtype(cfg.dtype))
+        else:
+            x = x_in
+        x, new_cache, _ = transformer.run_blocks(
+            cfg, params["blocks"], x, positions, cache=cache, decode=True)
+        out = transformer.head(cfg, params, x) if self.last else x
+        return out, new_cache
+
+    # ------------------------------------------------------------ public
+    def prefill_slot(self, x_in, slot: int, positions, prefix_embeds=None):
+        """Prefill one request (batch 1 inputs) into cache slot `slot`.
+        Recurrent states start from zero (fresh cache), then results are
+        scattered into the live batched cache."""
+        p0, p1 = self.periods
+        seq = positions.shape[1]
+        dt = jnp.dtype(self.cfg.dtype)
+        fresh = transformer.init_cache(self.cfg, 1, self.max_seq, dt,
+                                       n_periods=p1 - p0)
+        out, one_cache = self._prefill_fn(self.params, x_in, positions,
+                                          fresh, prefix_embeds,
+                                          with_prefix=prefix_embeds is not None)
+        self.cache = jax.tree.map(
+            lambda full, one: jax.lax.dynamic_update_slice(
+                full, one.astype(full.dtype),
+                (0, slot) + (0,) * (full.ndim - 2)),
+            self.cache, one_cache)
+        return out
+
+    def decode(self, x_in, positions):
+        out, self.cache = self._decode_fn(self.params, x_in, positions,
+                                          self.cache)
+        return out
+
+    def clear_slot(self, slot: int):
+        """Zero a slot's recurrent state (attn KV needs no clear: masked)."""
+        self.cache = jax.tree.map(
+            lambda a: a.at[:, slot].set(jnp.zeros_like(a[:, slot])),
+            self.cache)

@@ -1,0 +1,113 @@
+"""AdamW with fp32 state, optional ZeRO-1 (optimizer-state sharding over the
+data axis) and bf16 gradient compression."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import resolve
+from repro.models.common import ParamDef, map_defs
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def init_state(params):
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(f32, params),
+        "nu": jax.tree.map(f32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def state_structs(param_structs):
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(f32, param_structs),
+        "nu": jax.tree.map(f32, param_structs),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def state_specs(defs, zero1: bool = True):
+    """Optimizer-state PartitionSpecs. ZeRO-1: each state additionally
+    shards its first *physically replicated* dim over the data(+pod) axes.
+    Input shardings must divide evenly, so only dims divisible by 32 (data x
+    pod on the multi-pod mesh) qualify."""
+    from jax.sharding import PartitionSpec as P
+
+    def spec(d: ParamDef):
+        base = resolve(d.axes)
+        parts = list(base) + [None] * (len(d.shape) - len(base))
+        if zero1:
+            used = set()
+            for part in parts:
+                if part is None:
+                    continue
+                used.update((part,) if isinstance(part, str) else part)
+            if "data" not in used:
+                for i, (part, dim) in enumerate(zip(parts, d.shape)):
+                    if part is None and dim >= 32 and dim % 32 == 0:
+                        parts[i] = ("pod", "data")
+                        break
+        return P(*parts)
+
+    ps = map_defs(spec, defs)
+    return {"mu": ps, "nu": ps, "step": P()}
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state):
+    step = state["step"] + 1
+    lr = _schedule(cfg, step)
+
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mu_hat = mu / (1 - cfg.b1 ** step)
+        nu_hat = nu / (1 - cfg.b2 ** step)
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        new_p = (p.astype(jnp.float32)
+                 - lr * (delta + cfg.weight_decay * p.astype(jnp.float32)))
+        return new_p.astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n
+           in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_state = {
+        "mu": jax.tree.unflatten(tdef, [o[1] for o in out]),
+        "nu": jax.tree.unflatten(tdef, [o[2] for o in out]),
+        "step": step,
+    }
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

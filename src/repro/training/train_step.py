@@ -1,0 +1,40 @@
+"""Train step: value_and_grad over Model.loss, bf16 gradient compression,
+AdamW update. ``make_train_step`` returns the function the dry-run lowers."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.training import optimizer as opt
+
+
+def make_train_step(model: Model, cfg: opt.AdamWConfig = opt.AdamWConfig(),
+                    remat: str = "dots", grad_dtype: Optional[str] = "bfloat16"):
+    def train_step(params, state, batch):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, batch, remat=remat)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params)
+        if grad_dtype is not None:
+            # gradient compression: cross-replica reduction happens in bf16
+            gd = jnp.dtype(grad_dtype)
+            grads = jax.tree.map(lambda g: g.astype(gd), grads)
+        params, state, om = opt.apply_updates(cfg, params, grads, state)
+        metrics = dict(metrics, loss=loss, **om)
+        return params, state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return dict(metrics, loss=loss)
+    return eval_step

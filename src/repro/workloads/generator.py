@@ -1,0 +1,111 @@
+"""Workload generation following the paper's methodology (§8.3): requests
+sampled with Gamma-distributed inter-arrival times controlled by (RPS, CV);
+model instances mapped to Azure-trace functions round-robin, which yields a
+skewed per-model popularity — approximated here with a Zipf law."""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    req_id: int
+    model: str
+    app: str
+    arrival: float
+    prompt_tokens: int
+    output_tokens: int
+    slo_ttft: float
+    slo_tpot: float
+    # filled by the serving system:
+    first_token: Optional[float] = None
+    completion: Optional[float] = None
+    tokens_done: int = 0
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return None if self.first_token is None else self.first_token - self.arrival
+
+    @property
+    def tpot(self) -> Optional[float]:
+        if self.completion is None or self.output_tokens <= 1:
+            return 0.0 if self.completion is not None else None
+        return (self.completion - self.first_token) / (self.output_tokens - 1)
+
+    def ttft_ok(self) -> bool:
+        return self.ttft is not None and self.ttft <= self.slo_ttft + 1e-9
+
+    def tpot_ok(self) -> bool:
+        t = self.tpot
+        return t is not None and t <= self.slo_tpot + 1e-9
+
+
+@dataclass(frozen=True)
+class ModelInstance:
+    """One user deployment (the paper creates 64 instances per app)."""
+    name: str          # unique instance name, e.g. chatbot-7b#3
+    app: str
+    base_model: str
+    slo_ttft: float
+    slo_tpot: float
+    mean_prompt: int
+    mean_output: int
+    popularity: float = 1.0
+
+
+def make_instances(applications, n_per_app: int, slo_scale: float = 1.0
+                   ) -> List[ModelInstance]:
+    out = []
+    for app in applications:
+        for i in range(n_per_app):
+            out.append(ModelInstance(
+                name=f"{app.name}#{i}", app=app.name,
+                base_model=app.model,
+                slo_ttft=app.slo.ttft * slo_scale,
+                slo_tpot=app.slo.tpot * slo_scale,
+                mean_prompt=app.mean_prompt,
+                mean_output=app.mean_output))
+    return out
+
+
+def generate(instances: Sequence[ModelInstance], rps: float, cv: float,
+             duration: float, seed: int = 0, zipf_a: float = 1.1
+             ) -> List[Request]:
+    """Gamma arrivals: shape k = 1/CV^2, mean 1/rps. Instance choice ~ Zipf."""
+    rng = np.random.default_rng(seed)
+    shape = 1.0 / (cv * cv)
+    scale = (1.0 / rps) / shape
+    n_inst = len(instances)
+    ranks = np.arange(1, n_inst + 1, dtype=np.float64)
+    pop = ranks ** (-zipf_a)
+    pop /= pop.sum()
+    perm = rng.permutation(n_inst)           # which instance gets which rank
+
+    reqs: List[Request] = []
+    t = 0.0
+    rid = 0
+    while True:
+        t += rng.gamma(shape, scale)
+        if t >= duration:
+            break
+        inst = instances[perm[rng.choice(n_inst, p=pop)]]
+        prompt = max(8, int(rng.lognormal(math.log(inst.mean_prompt), 0.6)))
+        output = max(4, int(rng.lognormal(math.log(inst.mean_output), 0.6)))
+        reqs.append(Request(rid, inst.name, inst.app, t,
+                            min(prompt, 16384), min(output, 4096),
+                            inst.slo_ttft, inst.slo_tpot))
+        rid += 1
+    return reqs
+
+
+def burst(instance: ModelInstance, n: int, at: float = 0.0) -> List[Request]:
+    """n simultaneous requests to one model (Fig. 14 scale-up experiment)."""
+    return [Request(i, instance.name, instance.app, at,
+                    instance.mean_prompt, instance.mean_output,
+                    instance.slo_ttft, instance.slo_tpot)
+            for i in range(n)]

@@ -1,0 +1,35 @@
+import os
+
+# kernels dispatch to the jnp reference on CPU; tests that want interpret
+# mode set it explicitly. (Do NOT set XLA device-count flags here — smoke
+# tests and benches must see the single real device.)
+os.environ.setdefault("REPRO_KERNEL_BACKEND", "ref")
+
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_config, smoke_variant
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def smoke(name: str, **overrides):
+    cfg = smoke_variant(get_config(name))
+    if cfg.is_moe and "capacity_factor" not in overrides:
+        # no-drop regime so prefill/decode paths agree exactly
+        overrides["capacity_factor"] = float(cfg.n_experts)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+ALL_ARCHS = [
+    "granite-3-8b", "internlm2-20b", "starcoder2-7b", "qwen1.5-32b",
+    "qwen2-moe-a2.7b", "grok-1-314b", "llava-next-34b", "whisper-small",
+    "jamba-v0.1-52b", "rwkv6-1.6b",
+]

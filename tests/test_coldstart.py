@@ -1,0 +1,59 @@
+"""Worker-level overlapping timeline (Fig. 2 / Fig. 9 semantics)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coldstart import OverlapFlags, group_tpot, group_ttft, \
+    worker_timeline
+from repro.core.types import TimingProfile
+
+T = TimingProfile(t_cc=2.0, t_l=2.5, t_cu=0.5, t_n=0.01, t_p=1.5, t_d=0.042)
+
+
+def test_baseline_is_fully_sequential():
+    tl = worker_timeline(T, fetch_seconds=6.0, load_seconds=1.0,
+                         flags=OverlapFlags.none())
+    # cc -> lib -> cuda -> fetch -> load
+    assert math.isclose(tl.ready, 2.0 + 2.5 + 0.5 + 6.0 + 1.0)
+
+
+def test_full_overlap_matches_eq5():
+    tl = worker_timeline(T, fetch_seconds=6.0, load_seconds=1.0,
+                         flags=OverlapFlags.all())
+    expect = max(T.t_cc + T.t_cu + max(1.0, T.t_l), 6.0)
+    assert math.isclose(tl.ready, expect)
+
+
+def test_prefetch_only():
+    fl = OverlapFlags(prefetch=True, stream=False, overlap_load=False)
+    tl = worker_timeline(T, fetch_seconds=6.0, load_seconds=1.0, flags=fl)
+    # fetch starts at 0; load begins after max(runtime_end, fetch_start),
+    # completes after fetch ends (no streaming)
+    assert math.isclose(tl.ready, max(6.0, 2.0 + 2.5 + 0.5) + 1.0)
+
+
+@settings(max_examples=80, deadline=None)
+@given(fetch=st.floats(0.1, 60.0), load=st.floats(0.05, 10.0))
+def test_each_optimization_never_hurts(fetch, load):
+    base = worker_timeline(T, fetch, load, OverlapFlags.none()).ready
+    pf = worker_timeline(T, fetch, load,
+                         OverlapFlags(True, False, False)).ready
+    stream = worker_timeline(T, fetch, load,
+                             OverlapFlags(True, True, False)).ready
+    full = worker_timeline(T, fetch, load, OverlapFlags.all()).ready
+    assert pf <= base + 1e-9
+    assert stream <= pf + 1e-9
+    assert full <= stream + 1e-6 or math.isclose(full, stream, rel_tol=1e-6)
+
+
+def test_group_ttft_full_memory_pipeline():
+    ready = (5.0, 6.0, 5.5, 5.8)
+    got = group_ttft(ready, s=4, w=4, t=T)
+    assert math.isclose(got, 6.0 + T.t_p * 1.0 + T.t_n * 4)
+
+
+def test_group_tpot_eq2():
+    assert math.isclose(group_tpot(1, 1, T), T.t_d)
+    assert math.isclose(group_tpot(4, 0, T), T.t_d * 4 + T.t_n * 4)

@@ -1,0 +1,41 @@
+"""Consolidation policy + sliding-window predictor (§6.1)."""
+
+from repro.core.consolidation import (ConsolidationPolicy,
+                                      SlidingWindowPredictor)
+
+
+def test_predictor_window():
+    p = SlidingWindowPredictor(window_s=10.0)
+    for t in (0.0, 1.0, 2.0, 9.0):
+        p.record("m", t)
+    assert p.predicted_next_window("m", 9.5) == 4
+    assert p.predicted_next_window("m", 11.5) == 2   # 0,1 expired
+    assert p.predicted_next_window("m", 30.0) == 0
+    assert p.predicted_next_window("other", 5.0) == 0
+
+
+def test_plan_scale_down_when_quiet():
+    pred = SlidingWindowPredictor(60.0)
+    pol = ConsolidationPolicy(pred, per_worker_capacity=8)
+    plan = pol.plan("m", queue_len=2, now=0.0, max_pp=4, current_workers=1)
+    assert plan.mode == "down"
+    assert plan.keep_workers == 1
+
+
+def test_plan_scale_up_under_burst():
+    pred = SlidingWindowPredictor(60.0)
+    pol = ConsolidationPolicy(pred, per_worker_capacity=8)
+    for i in range(40):
+        pred.record("m", i * 0.1)
+    plan = pol.plan("m", queue_len=30, now=4.0, max_pp=4, current_workers=0)
+    assert plan.mode == "up"
+    # (30 queued + 40 predicted) / 8 = 9 workers
+    assert plan.keep_workers == 9
+    assert sum(plan.group_sizes) >= plan.keep_workers
+    assert all(1 <= g <= 4 for g in plan.group_sizes)
+
+
+def test_required_workers_floor():
+    pred = SlidingWindowPredictor(60.0)
+    pol = ConsolidationPolicy(pred, per_worker_capacity=8)
+    assert pol.required_workers("m", 0, 0.0) == 1

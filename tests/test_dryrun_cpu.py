@@ -1,0 +1,42 @@
+"""Dry-run plumbing on the single real CPU device: make_cell lowers and
+compiles smoke-scale cells on a (1,1) mesh (the 512-device production run
+lives in launch/dryrun.py)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import smoke
+from repro.configs.base import ShapeConfig
+from repro.distributed.sharding import use_mesh
+from repro.launch.mesh import make_cpu_mesh
+from repro.launch.specs import make_cell, rules_for
+
+TINY_SHAPES = {
+    "train": ShapeConfig("train_tiny", "train", 32, 2),
+    "prefill": ShapeConfig("prefill_tiny", "prefill", 32, 2),
+    "decode": ShapeConfig("decode_tiny", "decode", 32, 2),
+}
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "qwen2-moe-a2.7b",
+                                  "jamba-v0.1-52b", "rwkv6-1.6b",
+                                  "whisper-small", "llava-next-34b"])
+@pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
+def test_cell_compiles_cpu(arch, kind):
+    cfg = smoke(arch)
+    shape = TINY_SHAPES[kind]
+    if cfg.family == "vlm" and kind != "decode":
+        shape = dataclasses.replace(shape, seq_len=shape.seq_len +
+                                    cfg.n_image_tokens)
+    mesh = make_cpu_mesh()
+    fn, args, in_sh, out_sh, donate = make_cell(cfg, shape, mesh,
+                                                remat="none")
+    with use_mesh(mesh, rules_for(shape, "baseline", cfg)):
+        compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                           donate_argnums=donate).lower(*args).compile()
+    assert compiled.cost_analysis() is not None
+    mem = compiled.memory_analysis()
+    assert mem.temp_size_in_bytes >= 0

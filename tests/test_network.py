@@ -1,0 +1,76 @@
+"""Fair-share NIC fluid model (cluster/cluster.py)."""
+
+import math
+
+from repro.cluster.cluster import Cluster
+from repro.cluster.sim import EventSim
+from repro.core.types import GB, ServerSpec
+
+
+def mk():
+    sim = EventSim()
+    cl = Cluster(sim, [ServerSpec("s0", 2e9, 12e9, 24 * GB)])
+    return sim, cl
+
+
+def test_single_flow_time():
+    sim, cl = mk()
+    done = []
+    cl.start_fetch("s0", 10e9, lambda: done.append(sim.now))
+    sim.run()
+    assert math.isclose(done[0], 5.0, rel_tol=1e-6)
+
+
+def test_two_flows_fair_share():
+    sim, cl = mk()
+    done = {}
+    cl.start_fetch("s0", 10e9, lambda: done.__setitem__("a", sim.now))
+    cl.start_fetch("s0", 10e9, lambda: done.__setitem__("b", sim.now))
+    sim.run()
+    # both share 1 GB/s -> 10 s each
+    assert math.isclose(done["a"], 10.0, rel_tol=1e-6)
+    assert math.isclose(done["b"], 10.0, rel_tol=1e-6)
+
+
+def test_late_joiner():
+    sim, cl = mk()
+    done = {}
+    cl.start_fetch("s0", 10e9, lambda: done.__setitem__("a", sim.now))
+    sim.at(2.5, lambda: cl.start_fetch(
+        "s0", 10e9, lambda: done.__setitem__("b", sim.now)))
+    sim.run()
+    # a: 5GB alone (2.5s), then shares: 5GB left at 1GB/s -> done at 7.5s
+    assert math.isclose(done["a"], 7.5, rel_tol=1e-6)
+    # b: 2.5..7.5 at 1GB/s (5GB), then full rate for remaining 5GB -> 10.0
+    assert math.isclose(done["b"], 10.0, rel_tol=1e-6)
+
+
+def test_weighted_priority():
+    sim, cl = mk()
+    done = {}
+    cl.start_fetch("s0", 6e9, lambda: done.__setitem__("hi", sim.now),
+                   weight=2.0)
+    cl.start_fetch("s0", 6e9, lambda: done.__setitem__("lo", sim.now),
+                   weight=1.0)
+    sim.run()
+    assert done["hi"] < done["lo"]
+
+
+def test_cancel_fetch_releases_bandwidth():
+    sim, cl = mk()
+    done = {}
+    fa = cl.start_fetch("s0", 100e9, lambda: done.__setitem__("a", sim.now))
+    cl.start_fetch("s0", 10e9, lambda: done.__setitem__("b", sim.now))
+    sim.at(1.0, lambda: cl.cancel_fetch(fa))
+    sim.run()
+    # b: 1GB in first second, then 9GB at full 2GB/s -> 5.5s
+    assert math.isclose(done["b"], 5.5, rel_tol=1e-6)
+    assert "a" not in done
+
+
+def test_zero_byte_fetch_completes_immediately():
+    sim, cl = mk()
+    done = []
+    cl.start_fetch("s0", 0, lambda: done.append(sim.now))
+    sim.run()
+    assert done == [0.0]

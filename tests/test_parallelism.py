@@ -1,0 +1,137 @@
+"""Algorithm 1 + Eq. 1/2/5 predictor tests."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.parallelism import (predict_tpot, predict_ttft,
+                                    predict_ttft_overlapped, select_scheme)
+from repro.core.types import GB, Gbps, ModelProfile, ServerSpec, SLO, \
+    TimingProfile
+
+
+def servers(n=8, bw=16 * Gbps, pcie=12e9, hbm=24 * GB):
+    return {f"s{i}": ServerSpec(f"s{i}", bw, pcie, hbm) for i in range(n)}
+
+
+def profile(size_gb=12.5, slo=SLO(7.5, 0.2), **kw):
+    return ModelProfile("m", int(size_gb * GB), TimingProfile(**kw), slo)
+
+
+def test_eq1_hand_computed():
+    t = TimingProfile(t_cc=2, t_l=2.5, t_cu=0.5, t_n=0.01, t_p=1.5, t_d=0.04)
+    M, s, w = 16e9, 4, 2
+    ratios = [1 / 2e9 + 1 / 12e9] * 4
+    got = predict_ttft(M, s, w, ratios, t)
+    expect = (t.t_c + (M / s) * ratios[0]
+              + 1.5 * (4 - 2 + 2 / 4) + 0.01 * 4)
+    assert math.isclose(got, expect, rel_tol=1e-9)
+
+
+def test_eq2_hand_computed():
+    t = TimingProfile(t_d=0.04, t_n=0.01)
+    assert math.isclose(predict_tpot(1, 1, t), 0.04)
+    assert math.isclose(predict_tpot(4, 0, t), 0.04 * 4 + 0.01 * 4)
+    assert math.isclose(predict_tpot(4, 4, t), 0.04 * 1 + 0.01 * 4)
+
+
+def test_eq5_fetch_vs_container_path():
+    t = TimingProfile(t_cc=2, t_l=2.5, t_cu=0.5, t_n=0.0, t_p=0.0)
+    # huge model: fetch dominates
+    got = predict_ttft_overlapped(100e9, 1, 1, [2e9], [1e12], t)
+    assert math.isclose(got, 50.0)
+    # tiny model: container path dominates
+    got = predict_ttft_overlapped(1e9, 1, 1, [2e9], [12e9], t)
+    assert math.isclose(got, 2 + 0.5 + 2.5)
+
+
+def test_larger_s_reduces_fetch_time():
+    t = TimingProfile()
+    m = 50e9
+    prev = None
+    for s in (1, 2, 4):
+        v = predict_ttft_overlapped(m, s, s, [2e9] * s, [12e9] * s, t)
+        if prev is not None:
+            assert v < prev
+        prev = v
+
+
+def test_select_scheme_meets_slo():
+    prof = profile(12.5)
+    srv = servers()
+    free = {k: 24 * GB for k in srv}
+    eff = {k: 2e9 for k in srv}
+    sch = select_scheme(prof, srv, free, eff)
+    assert sch.slo_ok
+    assert sch.predicted_ttft <= prof.slo.ttft
+    assert sch.predicted_tpot <= prof.slo.tpot
+    assert len(set(sch.servers)) == sch.s
+
+
+def test_select_scheme_tight_slo_uses_parallelism():
+    # big model + tight TTFT: s must exceed 1
+    prof = profile(40.0, slo=SLO(9.0, 0.5))
+    srv = servers(n=8, hbm=64 * GB)
+    free = {k: 64 * GB for k in srv}
+    eff = {k: 2e9 for k in srv}
+    sch = select_scheme(prof, srv, free, eff)
+    assert sch.s > 1
+    assert sch.slo_ok
+
+
+def test_fallback_prefers_tpot_clean():
+    # impossible TTFT: fallback must still satisfy TPOT if possible
+    prof = profile(40.0, slo=SLO(0.5, 0.2))
+    srv = servers(n=8, hbm=64 * GB)
+    free = {k: 64 * GB for k in srv}
+    eff = {k: 2e9 for k in srv}
+    sch = select_scheme(prof, srv, free, eff)
+    assert not sch.slo_ok
+    assert sch.predicted_tpot <= prof.slo.tpot
+
+
+def test_fixed_s_honored():
+    prof = profile(12.5, slo=SLO(1e9, 1e9))
+    srv = servers()
+    free = {k: 24 * GB for k in srv}
+    eff = {k: 2e9 for k in srv}
+    sch = select_scheme(prof, srv, free, eff, fixed_s=3)
+    assert sch.s == 3
+
+
+def test_contended_servers_excluded():
+    prof = profile(12.5)
+    srv = servers(n=4)
+    free = {k: 24 * GB for k in srv}
+    eff = {"s0": 0.0, "s1": 2e9, "s2": 2e9, "s3": 2e9}  # s0 contended out
+    sch = select_scheme(prof, srv, free, eff)
+    assert "s0" not in sch.servers
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    size=st.floats(1e9, 300e9),
+    ttft=st.floats(1.0, 60.0),
+    tpot=st.floats(0.05, 0.5),
+    n_srv=st.integers(2, 12),
+)
+def test_scheme_invariants(size, ttft, tpot, n_srv):
+    prof = ModelProfile("m", int(size), TimingProfile(),
+                        SLO(ttft, tpot), full_hbm_bytes=int(size * 1.2))
+    srv = servers(n=n_srv, hbm=int(400e9))
+    free = {k: int(400e9) for k in srv}
+    eff = {k: 2e9 for k in srv}
+    sch = select_scheme(prof, srv, free, eff)
+    # invariants: s within bounds, w <= s, distinct servers, predictions
+    # consistent with the published equations
+    assert 1 <= sch.s <= prof.max_pp
+    assert 0 <= sch.w <= sch.s
+    assert len(sch.servers) == sch.s
+    assert len(set(sch.servers)) == sch.s
+    assert math.isclose(sch.predicted_tpot,
+                        predict_tpot(sch.s, sch.w, prof.timings),
+                        rel_tol=1e-9)
+    if sch.slo_ok:
+        assert sch.predicted_ttft <= ttft + 1e-9
+        assert sch.predicted_tpot <= tpot + 1e-9

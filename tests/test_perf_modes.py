@@ -1,0 +1,79 @@
+"""§Perf optimization modes must be bit-compatible with the baselines:
+causal-skip blocked attention and append-combine decode."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import smoke
+from repro.kernels import ops, ref
+from repro.models import build_model
+
+
+def test_causal_skip_matches_masked_full():
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    b, s, hq, hkv, hd = 2, 260, 4, 2, 32
+    q = jax.random.normal(ks[0], (b, s, hq, hd))
+    k = jax.random.normal(ks[1], (b, s, hkv, hd))
+    v = jax.random.normal(ks[2], (b, s, hkv, hd))
+    skip = ref.flash_attention_blocked_skip(q, k, v, q_block=64, kv_block=64)
+    full = ref.flash_attention_blocked(q, k, v, causal=True, q_block=64,
+                                       kv_block=64)
+    assert float(jnp.max(jnp.abs(skip - full))) < 2e-5
+
+
+def test_causal_skip_grad():
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    b, s, hq, hkv, hd = 1, 96, 2, 1, 16
+    q = jax.random.normal(ks[0], (b, s, hq, hd))
+    k = jax.random.normal(ks[1], (b, s, hkv, hd))
+    v = jax.random.normal(ks[2], (b, s, hkv, hd))
+    g1 = jax.grad(lambda q: jnp.sum(ref.flash_attention_blocked_skip(
+        q, k, v, q_block=32, kv_block=32) ** 2))(q)
+    g2 = jax.grad(lambda q: jnp.sum(ref.mha_reference(
+        q, k, v, causal=True) ** 2))(q)
+    assert float(jnp.max(jnp.abs(g1 - g2))) < 5e-4
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "jamba-v0.1-52b"])
+def test_decode_append_matches_scatter(arch, rng):
+    cfg = smoke(arch)
+    m = build_model(cfg)
+    params = m.init(rng)
+    batch = m.dummy_inputs(rng, batch=2, seq=10)
+    logits0, cache0 = m.prefill(params, batch, max_seq=16)
+    tok = jnp.argmax(logits0, -1)[:, None]
+    pos = jnp.full((2, 1), 10, jnp.int32)
+    try:
+        ops.set_decode_mode("scatter")
+        l1, c1 = m.decode_step(params, cache0, tok, pos)
+        ops.set_decode_mode("append")
+        l2, c2 = m.decode_step(params, cache0, tok, pos)
+    finally:
+        ops.set_decode_mode("scatter")
+    assert float(jnp.max(jnp.abs(l1 - l2))) < 1e-4
+    for a, b in zip(jax.tree.leaves(c1), jax.tree.leaves(c2)):
+        assert float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                     - b.astype(jnp.float32)))) < 1e-5
+
+
+def test_decode_append_empty_cache(rng):
+    """pos=0: no prior tokens — the combine must reduce to pure
+    self-attention (l_cache = 0 edge case)."""
+    cfg = smoke("granite-3-8b")
+    m = build_model(cfg)
+    params = m.init(rng)
+    cache = m.init_cache(batch=2, max_seq=8)
+    tok = jnp.array([[3], [5]], jnp.int32)
+    pos = jnp.zeros((2, 1), jnp.int32)
+    try:
+        ops.set_decode_mode("append")
+        l_app, _ = m.decode_step(params, cache, tok, pos)
+        ops.set_decode_mode("scatter")
+        l_sc, _ = m.decode_step(params, cache, tok, pos)
+    finally:
+        ops.set_decode_mode("scatter")
+    assert jnp.all(jnp.isfinite(l_app))
+    assert float(jnp.max(jnp.abs(l_app - l_sc))) < 1e-4

@@ -1,0 +1,82 @@
+"""Roofline machinery: loop-aware HLO collective parser + analytic terms."""
+
+import math
+
+from repro.configs import SHAPES, get_config
+from repro.roofline import analytic
+from repro.roofline.analysis import (Roofline, collective_bytes,
+                                     model_flops)
+
+SYNTH_HLO = """
+HloModule jit_step
+
+%loop_body.1 (p: (s32[], bf16[8,128])) -> (s32[], bf16[8,128]) {
+  %ar = bf16[8,128]{1,0} all-reduce(%x), replica_groups={}
+  ROOT %t = (s32[], bf16[8,128]) tuple(%i, %ar)
+}
+
+%loop_cond.1 (p: (s32[], bf16[8,128])) -> pred[] {
+  %limit = s32[] constant(40)
+  ROOT %cmp = pred[] compare(%i, %limit), direction=LT
+}
+
+ENTRY %main (a: bf16[8,128]) -> bf16[8,128] {
+  %ag = bf16[16,128]{1,0} all-gather(%a), dimensions={0}
+  %w = (s32[], bf16[8,128]) while(%init), condition=%loop_cond.1, body=%loop_body.1
+  ROOT %out = bf16[8,128] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_parser_multiplies_loop_bodies():
+    out = collective_bytes(SYNTH_HLO)
+    assert out["all-gather"] == 16 * 128 * 2
+    # the all-reduce sits in a body executed 40x
+    assert out["all-reduce"] == 40 * 8 * 128 * 2
+
+
+def test_collective_parser_ignores_done():
+    txt = """
+ENTRY %main (a: bf16[4,4]) -> bf16[4,4] {
+  %s = bf16[4,4] all-reduce-start(%a)
+  %d = bf16[4,4] all-reduce-done(%s)
+}
+"""
+    out = collective_bytes(txt)
+    assert out["all-reduce"] == 4 * 4 * 2
+
+
+def test_model_flops_conventions():
+    cfg = get_config("granite-3-8b")
+    n = cfg.active_param_count()
+    assert model_flops(cfg, SHAPES["train_4k"]) == 6.0 * n * 256 * 4096
+    assert model_flops(cfg, SHAPES["decode_32k"]) == 2.0 * n * 128
+
+
+def test_moe_uses_active_params():
+    moe = get_config("qwen2-moe-a2.7b")
+    assert model_flops(moe, SHAPES["train_4k"]) < \
+        6.0 * moe.param_count() * 256 * 4096
+
+
+def test_analytic_flops_close_to_6nd():
+    """For a dense model, analytic train flops should be within ~2x of the
+    6*N*D convention (4/3 remat factor + attention + vocab head)."""
+    cfg = get_config("granite-3-8b")
+    shape = SHAPES["train_4k"]
+    ours = analytic.step_flops(cfg, shape) * 4.0
+    canon = model_flops(cfg, shape)
+    assert 0.8 < ours / canon < 2.5, ours / canon
+
+
+def test_roofline_terms_and_dominance():
+    r = Roofline("a", "s", "m", 256, flops_total=197e12 * 256,
+                 bytes_per_device=819e9 * 2,
+                 coll_bytes_per_device={"all-reduce": 50e9},
+                 peak_memory_per_device=1 << 30,
+                 model_flops_total=197e12 * 128)
+    assert math.isclose(r.compute_s, 1.0)
+    assert math.isclose(r.memory_s, 2.0)
+    assert math.isclose(r.collective_s, 1.0)
+    assert r.dominant == "memory"
+    assert math.isclose(r.roofline_fraction, 0.25)

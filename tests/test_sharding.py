@@ -1,0 +1,47 @@
+"""Logical-axis resolution + dedup invariants."""
+
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (DEFAULT_RULES, constrain, resolve,
+                                        use_mesh)
+
+
+def test_resolve_outside_mesh_uses_defaults():
+    assert resolve(("batch", "seq", "embed")) == P(("data",))
+    assert resolve(("embed", "ffn")) == P(None, "model")
+
+
+def test_resolve_dedupes_physical_axes():
+    # act_seq and heads both -> 'model' under train rules: first wins
+    with use_mesh(None, {"act_seq": "model"}):
+        spec = resolve(("batch", "act_seq", "heads"))
+    assert spec == P(("data",), "model")
+
+
+def test_rules_dropped_for_missing_axes():
+    mesh = jax.make_mesh((1,), ("data",))
+    with use_mesh(mesh, None):
+        # 'model' axis doesn't exist on this mesh -> mapped to None
+        assert resolve(("embed", "ffn")) == P()
+
+
+def test_constrain_noop_without_mesh():
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    assert constrain(x, "batch", "embed") is x
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.sampled_from(sorted(DEFAULT_RULES)), min_size=1,
+                max_size=5))
+def test_resolve_never_reuses_axis(names):
+    spec = resolve(tuple(names))
+    used = []
+    for part in spec:
+        if part is None:
+            continue
+        used.extend((part,) if isinstance(part, str) else part)
+    assert len(used) == len(set(used))

@@ -1,0 +1,95 @@
+"""End-to-end serverless simulation: systems behave per the paper."""
+
+import pytest
+
+from repro.core.types import GB, Gbps, ModelProfile, ServerSpec, SLO
+from repro.serving.simulation import ServerlessSim
+from repro.workloads.applications import APPLICATIONS, WARM, timings_for
+from repro.workloads.generator import burst, generate, make_instances
+
+
+def servers():
+    return ([ServerSpec(f"a10-{i}", 16 * Gbps, 12e9, 24 * GB, 1)
+             for i in range(4)]
+            + [ServerSpec(f"v100-{i}", 16 * Gbps, 12e9, 32 * GB, 4)
+               for i in range(4)])
+
+
+def profiles():
+    return {n: ModelProfile(n, w.size_bytes, timings_for(n), SLO(7.5, 0.2))
+            for n, w in WARM.items()}
+
+
+def _run(system, reqs_kw=None, **kw):
+    insts = make_instances(APPLICATIONS, 8)
+    sim = ServerlessSim(servers(), profiles(), insts, system=system, **kw)
+    reqs = generate(insts, rps=0.4, cv=8.0, duration=400, seed=0,
+                    **(reqs_kw or {}))
+    sim.submit(reqs)
+    sim.run(until=5000)
+    return sim, reqs
+
+
+@pytest.mark.parametrize("system", ["vllm", "serverlessllm", "hydra"])
+def test_all_requests_complete(system):
+    sim, reqs = _run(system)
+    assert len(sim.finished) == len(reqs)
+    for r in sim.finished:
+        assert r.first_token is not None and r.completion is not None
+        assert r.completion >= r.first_token >= r.arrival
+
+
+def test_hydra_beats_vllm_on_cold_ttft():
+    m_v, _ = _run("vllm")
+    m_h, _ = _run("hydra")
+    assert m_h.metrics()["ttft_mean"] < m_v.metrics()["ttft_mean"]
+    assert m_h.metrics()["ttft_p99"] < m_v.metrics()["ttft_p99"]
+
+
+def test_single_cold_start_matches_predictor():
+    """Measured single cold start ~= Eq.5 + prefill terms (idle cluster)."""
+    insts = make_instances(APPLICATIONS[:1], 1, slo_scale=100.0)
+    sim = ServerlessSim(servers(), profiles(), insts, system="hydra",
+                        force_s=1)
+    reqs = burst(insts[0], 1)
+    sim.submit(reqs)
+    sim.run(until=600)
+    prof = profiles()["llama2-7b"]
+    t = prof.timings
+    fetch = prof.size_bytes / (16 * Gbps)
+    load = prof.size_bytes / 12e9
+    ready = max(t.t_cc + t.t_cu + max(load, t.t_l), fetch)
+    prefill = t.t_p * insts[0].mean_prompt / 1024.0
+    assert abs(reqs[0].ttft - (ready + prefill)) < 0.2
+
+
+def test_failure_recovery():
+    """A killed worker's requests are re-queued and complete via a fresh
+    (pipeline-parallel) cold start."""
+    insts = make_instances(APPLICATIONS[:1], 1, slo_scale=100.0)
+    sim = ServerlessSim(servers(), profiles(), insts, system="hydra")
+    reqs = burst(insts[0], 4)
+    sim.submit(reqs)
+    sim.sim.at(12.0, lambda: sim.inject_failure(insts[0].name))
+    sim.run(until=2000)
+    assert sim.failures_injected == 1
+    assert all(r.completion is not None for r in reqs)
+
+
+def test_tpot_attainment_stays_high():
+    sim, _ = _run("hydra")
+    assert sim.metrics()["tpot_attainment"] > 0.85
+
+
+def test_keepalive_frees_hbm():
+    insts = make_instances(APPLICATIONS[:1], 1, slo_scale=100.0)
+    sim = ServerlessSim(servers(), profiles(), insts, system="hydra",
+                        keepalive_s=30.0)
+    reqs = burst(insts[0], 1)
+    sim.submit(reqs)
+    sim.run(until=3000)
+    total_free = sum(d.hbm_free for s in sim.cluster.servers.values()
+                     for d in s.devices)
+    total = sum(d.hbm_total for s in sim.cluster.servers.values()
+                for d in s.devices)
+    assert total_free == total          # everything released after idle

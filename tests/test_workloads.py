@@ -1,0 +1,51 @@
+"""Workload generator statistics."""
+
+import numpy as np
+
+from repro.workloads.applications import APPLICATIONS
+from repro.workloads.generator import burst, generate, make_instances
+
+
+def test_instance_creation():
+    insts = make_instances(APPLICATIONS, 4)
+    assert len(insts) == 4 * len(APPLICATIONS)
+    assert len({i.name for i in insts}) == len(insts)
+    scaled = make_instances(APPLICATIONS, 1, slo_scale=2.0)
+    assert scaled[0].slo_ttft == 2 * APPLICATIONS[0].slo.ttft
+
+
+def test_rate_and_cv():
+    insts = make_instances(APPLICATIONS, 8)
+    reqs = generate(insts, rps=2.0, cv=4.0, duration=2000, seed=0)
+    arr = np.array([r.arrival for r in reqs])
+    inter = np.diff(arr)
+    rate = len(reqs) / 2000
+    assert 1.6 < rate < 2.4
+    cv = inter.std() / inter.mean()
+    assert 3.0 < cv < 5.0
+
+
+def test_determinism():
+    insts = make_instances(APPLICATIONS, 4)
+    a = generate(insts, 1.0, 2.0, 200, seed=5)
+    b = generate(insts, 1.0, 2.0, 200, seed=5)
+    assert [(r.model, r.arrival) for r in a] == \
+        [(r.model, r.arrival) for r in b]
+
+
+def test_popularity_is_skewed():
+    insts = make_instances(APPLICATIONS, 16)
+    reqs = generate(insts, rps=2.0, cv=2.0, duration=2000, seed=1)
+    counts = {}
+    for r in reqs:
+        counts[r.model] = counts.get(r.model, 0) + 1
+    ordered = sorted(counts.values(), reverse=True)
+    # zipf: the head model sees far more traffic than the median
+    assert ordered[0] > 5 * max(ordered[len(ordered) // 2], 1)
+
+
+def test_burst():
+    insts = make_instances(APPLICATIONS, 1)
+    reqs = burst(insts[0], 30, at=3.0)
+    assert len(reqs) == 30
+    assert all(r.arrival == 3.0 for r in reqs)
