@@ -68,9 +68,9 @@ def worker_timeline(t: TimingProfile, fetch_seconds: float,
     if flags.prefetch:
         fetch_start = start
     else:
-        fetch_start = cuda_end if flags.overlap_load else cuda_end
-        # classic workflow: fetch after the full runtime init
-        fetch_start = max(fetch_start, lib_end, cuda_end)
+        # classic workflow: fetch only after the full runtime init,
+        # whichever order (lib/cuda) the flags put it in
+        fetch_start = max(lib_end, cuda_end)
     fetch_end = fetch_start + fetch_seconds
     spans["fetch"] = (fetch_start, fetch_end)
 
@@ -82,6 +82,11 @@ def worker_timeline(t: TimingProfile, fetch_seconds: float,
     spans["load"] = (load_begin, load_end)
 
     ready = max(load_end, lib_end)
+    assert all(s0 <= s1 for s0, s1 in spans.values())
+    assert not (not flags.prefetch
+                and spans["fetch"][0] < max(lib_end, cuda_end)), \
+        "no-prefetch fetch must wait for the full runtime init"
+    assert ready >= max(s1 for _, s1 in spans.values()) - 1e-12
     return WorkerTimeline(ready=ready, spans=spans)
 
 

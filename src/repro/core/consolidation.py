@@ -68,14 +68,17 @@ class ConsolidationPolicy:
         (required > current+1) switch to scale-UP: create pipeline groups
         covering the deficit; every member later becomes standalone.
         """
+        assert max_pp >= 1
         required = self.required_workers(model, queue_len, now)
         deficit = max(1, required - current_workers)
         if deficit <= 1:
-            return ConsolidationPlan("down", 1, (min(max_pp, max(2, max_pp)),))
+            # widest pipeline the placement allows: fastest cold start,
+            # consolidating down to one standalone worker afterwards
+            return ConsolidationPlan("down", 1, (max_pp,))
         groups: List[int] = []
         remaining = deficit
         while remaining > 0:
-            g = min(max_pp, remaining) if remaining >= 2 else 2
+            g = min(max_pp, remaining)
             groups.append(g)
             remaining -= g
         return ConsolidationPlan("up", deficit, tuple(groups))

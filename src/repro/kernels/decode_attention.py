@@ -1,10 +1,15 @@
-"""Pallas TPU kernel: GQA decode attention (flash-decoding).
+"""Pallas TPU kernels: GQA decode attention (flash-decoding).
 
-One new query token per sequence attends to a long KV cache. Grid
-(B, Hkv, nk): all G = Hq/Hkv query heads of a KV group are processed
-together as a (G, hd) tile; the nk axis walks KV blocks sequentially with
-the online-softmax state in VMEM scratch. Per-sequence valid length
-``kv_len`` masks the tail.
+Two variants share the online-softmax inner loop:
+
+* ``decode_attention`` — slot-contiguous caches ``(B, S, Hkv, hd)``; grid
+  (B, Hkv, nk) walks KV blocks sequentially with the softmax state in VMEM
+  scratch. Per-sequence valid length ``kv_len`` masks the tail.
+* ``paged_decode_attention`` — vLLM-style paged caches: a shared page pool
+  ``(N, bs, Hkv, hd)`` addressed through a per-sequence block table
+  ``(B, nb)``. The table is a scalar-prefetch operand so the K/V BlockSpec
+  index maps gather the right page for each (sequence, step) before the
+  kernel body runs.
 """
 
 from __future__ import annotations
@@ -18,7 +23,41 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import compiler_params
+
 NEG_INF = -1e30
+
+
+def _softmax_step(q, k, v, kpos, valid_len, m_scr, l_scr, acc_scr,
+                  scale: float):
+    """One online-softmax accumulation over a KV tile, shared by the
+    contiguous and paged kernels. q (G,hd); k,v (kb,hd); kpos (1,kb)
+    absolute token positions of the tile. Fully-masked tiles (ragged
+    tails, kv_len==0 rows) contribute exactly zero."""
+    mask = kpos < valid_len
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)                   # (G, kb)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+
+def _softmax_init(m_scr, l_scr, acc_scr):
+    m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+    l_scr[...] = jnp.zeros_like(l_scr)
+    acc_scr[...] = jnp.zeros_like(acc_scr)
+
+
+def _softmax_finish(o_ref, m_scr, l_scr, acc_scr):
+    denom = jnp.maximum(l_scr[...], 1e-30)
+    o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
 
 
 def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
@@ -28,36 +67,19 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     @pl.when(ik == 0)
     def _init():
-        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
-        l_scr[...] = jnp.zeros_like(l_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
+        _softmax_init(m_scr, l_scr, acc_scr)
 
     q = q_ref[0, 0].astype(jnp.float32)               # (G, hd)
     k = k_ref[0, 0].astype(jnp.float32)               # (kb, hd)
     v = v_ref[0, 0].astype(jnp.float32)
-    valid_len = len_ref[0, 0]
-
     kpos = ik * kv_block + jax.lax.broadcasted_iota(
         jnp.int32, (1, kv_block), 1)                  # (1, kb)
-    mask = kpos < valid_len
-
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-    s = jnp.where(mask, s, NEG_INF)                   # (G, kb)
-
-    m_prev = m_scr[...]
-    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
-    p = jnp.exp(s - m_new)
-    corr = jnp.exp(m_prev - m_new)
-    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
-    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    m_scr[...] = m_new
+    _softmax_step(q, k, v, kpos, len_ref[0, 0], m_scr, l_scr, acc_scr,
+                  scale)
 
     @pl.when(ik == nk - 1)
     def _finish():
-        denom = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        _softmax_finish(o_ref, m_scr, l_scr, acc_scr)
 
 
 def decode_attention(q, k_cache, v_cache, kv_len, *,
@@ -99,9 +121,89 @@ def decode_attention(q, k_cache, v_cache, kv_len, *,
             pltpu.VMEM((group, 1), jnp.float32),
             pltpu.VMEM((group, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lens, qg, kt, vt)
+
+    return out.reshape(b, 1, hq, hd)
+
+
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale: float, page_size: int):
+    ib = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        _softmax_init(m_scr, l_scr, acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)            # (bs, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    kpos = ib * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)                 # (1, bs)
+    _softmax_step(q, k, v, kpos, len_ref[0, 0], m_scr, l_scr, acc_scr,
+                  scale)
+
+    @pl.when(ib == nb - 1)
+    def _finish():
+        _softmax_finish(o_ref, m_scr, l_scr, acc_scr)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, kv_len, *,
+                           scale: Optional[float] = None,
+                           interpret: bool = False):
+    """q (B,1,Hq,hd); pages (N,bs,Hkv,hd); block_tables (B,nb) int32 page
+    ids; kv_len (B,) -> (B,1,Hq,hd).
+
+    Rows of ``block_tables`` past a sequence's live length may hold any
+    valid page id (conventionally 0): the ``kv_len`` mask zeroes their
+    contribution.
+    """
+    b, one, hq, hd = q.shape
+    assert one == 1
+    n_pages, page_size, hkv, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    qg = q[:, 0].reshape(b, hkv, group, hd)           # (B,Hkv,G,hd)
+    lens = kv_len.astype(jnp.int32).reshape(b, 1)
+    tables = block_tables.astype(jnp.int32)
+
+    grid = (b, hkv, nb)
+    kernel = functools.partial(_paged_kernel, scale=scale,
+                               page_size=page_size)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bi, h, ib, bt: (bi, 0)),
+            pl.BlockSpec((1, 1, group, hd),
+                         lambda bi, h, ib, bt: (bi, h, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda bi, h, ib, bt: (bt[bi, ib], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda bi, h, ib, bt: (bt[bi, ib], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, hd),
+                               lambda bi, h, ib, bt: (bi, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, hd), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, hd), q.dtype),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables, lens, qg, k_pages, v_pages)
 
     return out.reshape(b, 1, hq, hd)

@@ -5,6 +5,11 @@ Models call these wrappers; the backend is selected once per process:
   * 'interpret'  — same kernels, interpret=True (CPU correctness runs)
   * 'ref'        — blocked pure-jnp implementations (default on CPU; also
                    what the dry-run lowers, so the compiled HLO is flash-like)
+
+Env knobs (read once, overridable via the setters):
+  REPRO_KERNEL_BACKEND = pallas | interpret | ref
+  REPRO_DECODE_MODE    = scatter | append | paged
+  REPRO_ATTN_MODE      = masked_full | causal_skip
 """
 
 from __future__ import annotations
@@ -16,14 +21,20 @@ import jax
 
 from repro.kernels import ref as _ref
 
+DECODE_MODES = ("scatter", "append", "paged")
+
 _BACKEND = None
-_ATTN_MODE = "masked_full"        # 'masked_full' | 'causal_skip' (§Perf)
-_DECODE_MODE = "scatter"          # 'scatter' | 'append' (§Perf it.5)
+_ATTN_MODE = os.environ.get("REPRO_ATTN_MODE", "masked_full")
+_DECODE_MODE = os.environ.get("REPRO_DECODE_MODE", "scatter")
+assert _ATTN_MODE in ("masked_full", "causal_skip"), \
+    f"REPRO_ATTN_MODE={_ATTN_MODE!r}: want masked_full|causal_skip"
+assert _DECODE_MODE in DECODE_MODES, \
+    f"REPRO_DECODE_MODE={_DECODE_MODE!r}: want {'|'.join(DECODE_MODES)}"
 
 
 def set_decode_mode(mode: str):
     global _DECODE_MODE
-    assert mode in ("scatter", "append")
+    assert mode in DECODE_MODES
     _DECODE_MODE = mode
 
 
@@ -91,6 +102,20 @@ def decode_attention(q, k_cache, v_cache, kv_len, *,
                                     interpret=(be == "interpret"))
     return _ref.decode_attention_reference(q, k_cache, v_cache, kv_len,
                                            scale=scale)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, kv_len, *,
+                           scale: Optional[float] = None):
+    """Single-token decode against a paged KV pool. q (B,1,Hq,hd);
+    pages (N,bs,Hkv,hd); block_tables (B,nb) page ids; kv_len (B,)."""
+    be = backend()
+    if be in ("pallas", "interpret"):
+        from repro.kernels import decode_attention as _da
+        return _da.paged_decode_attention(
+            q, k_pages, v_pages, block_tables, kv_len, scale=scale,
+            interpret=(be == "interpret"))
+    return _ref.paged_decode_attention_reference(
+        q, k_pages, v_pages, block_tables, kv_len, scale=scale)
 
 
 def wkv6(r, k, v, w, u, initial_state=None, *, chunk: int = 64):

@@ -1,0 +1,18 @@
+"""Version-compat layer for Pallas TPU across JAX releases.
+
+JAX renamed ``pltpu.TPUCompilerParams`` (0.4.x) to ``pltpu.CompilerParams``
+(0.5+). Kernels import :func:`compiler_params` instead of naming the class so
+they run on both.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+
+def compiler_params(**kwargs):
+    """Build the TPU compiler-params object under whichever name exists."""
+    return _COMPILER_PARAMS_CLS(**kwargs)

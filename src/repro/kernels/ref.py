@@ -196,6 +196,49 @@ def decode_attention_reference(q, k_cache, v_cache, kv_len, *,
                          scale=scale)
 
 
+def paged_decode_attention_reference(q, k_pages, v_pages, block_tables,
+                                     kv_len, *,
+                                     scale: Optional[float] = None):
+    """Blocked oracle for the paged decode kernel.
+
+    q (B,1,Hq,hd); pages (N,bs,Hkv,hd) shared pool; block_tables (B,nb)
+    int32 page ids; kv_len (B,) valid lengths. Scans the block table with
+    an online softmax — the page gather is one ``jnp.take`` per step, so
+    no (B, nb*bs) contiguous cache is ever materialized.
+    """
+    b, one, hq, hd = q.shape
+    n_pages, bs, hkv, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qf = q[:, 0].astype(jnp.float32)                   # (B,Hq,hd)
+    tables = block_tables.astype(jnp.int32)
+
+    def step(carry, ib):
+        m, l, acc = carry
+        page = tables[:, ib]                           # (B,)
+        k = _gqa_expand(jnp.take(k_pages, page, axis=0), hq)
+        v = _gqa_expand(jnp.take(v_pages, page, axis=0), hq)
+        kpos = ib * bs + jnp.arange(bs)
+        s = jnp.einsum("bhd,bkhd->bhk", qf,
+                       k.astype(jnp.float32)) * scale  # (B,Hq,bs)
+        mask = kpos[None, None, :] < kv_len[:, None, None]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhk,bkhd->bhd", p, v.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hq), jnp.float32)
+    a0 = jnp.zeros((b, hq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(nb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out[:, None].astype(q.dtype)
+
+
 def decode_attention_with_stats(q, k_cache, v_cache, kv_len, *,
                                 scale: Optional[float] = None):
     """Decode attention that also returns the softmax stats (m, l) so a new

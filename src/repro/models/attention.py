@@ -60,11 +60,38 @@ def kv_cache_structs(cfg: ModelConfig, n_attn_layers: int, batch: int,
 KV_CACHE_AXES = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
 
 
+def make_paged_kv_cache(cfg: ModelConfig, n_attn_layers: int, n_pages: int,
+                        page_size: int, dtype) -> dict:
+    """Paged KV pool shared by all sequences: layout (L, N, bs, Hkv, hd);
+    sequences address pages through per-request block tables."""
+    shape = (n_attn_layers, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k_pages": jnp.zeros(shape, dtype),
+        "v_pages": jnp.zeros(shape, dtype),
+    }
+
+
+def paged_kv_write(pages, new, block_tables, positions):
+    """Scatter new K/V rows into the shared page pool.
+
+    pages (N,bs,Hkv,hd); new (B,S,Hkv,hd); block_tables (B,nb) int32 page
+    ids; positions (B,S) absolute token positions (token t of sequence b
+    lives at page block_tables[b, t // bs], row t % bs).
+    """
+    n_pages, bs = pages.shape[0], pages.shape[1]
+    page = jnp.take_along_axis(block_tables, positions // bs, axis=1)
+    idx = (page * bs + positions % bs).reshape(-1)
+    flat = pages.reshape((n_pages * bs,) + pages.shape[2:])
+    vals = new.astype(pages.dtype).reshape((-1,) + new.shape[2:])
+    return flat.at[idx].set(vals).reshape(pages.shape)
+
+
 def self_attention(cfg: ModelConfig, p: dict, x, *, positions,
                    causal: bool = True,
                    kv_cache: Optional[Tuple] = None,
                    decode: bool = False,
-                   allow_append: bool = True):
+                   allow_append: bool = True,
+                   block_tables=None):
     """x (B,S,d). positions (B,S) absolute positions of the tokens in x.
 
     Full-sequence mode (train/prefill): attends within x; if kv_cache slices
@@ -72,6 +99,10 @@ def self_attention(cfg: ModelConfig, p: dict, x, *, positions,
 
     Decode mode: S == 1; k/v are scattered into the cache at ``positions``
     and attention runs against the cache with per-sequence lengths.
+
+    When ``block_tables`` (B,nb) is given the kv_cache tuple holds *paged*
+    pools (N,bs,Hkv,hd): writes go through :func:`paged_kv_write` and decode
+    reads gather pages via the table (ops.paged_decode_attention).
     Returns (out (B,S,d), (k_cache', v_cache') or None).
     """
     bsz, seq, _ = x.shape
@@ -88,17 +119,27 @@ def self_attention(cfg: ModelConfig, p: dict, x, *, positions,
     if not decode:
         if kv_cache is not None:
             ck, cv = kv_cache
-            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
-                                              (0, 0, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
-                                              (0, 0, 0, 0))
+            if block_tables is not None:
+                ck = paged_kv_write(ck, k, block_tables, positions)
+                cv = paged_kv_write(cv, v, block_tables, positions)
+            else:
+                ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                                  (0, 0, 0, 0))
+                cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                                  (0, 0, 0, 0))
             new_cache = (ck, cv)
         q_off = 0
         out = ops.flash_attention(q, k, v, causal=causal, q_offset=q_off)
     else:
         assert kv_cache is not None and seq == 1
         ck, cv = kv_cache
-        if ops.decode_mode() == "append" and allow_append:
+        if block_tables is not None:
+            ck = paged_kv_write(ck, k, block_tables, positions)
+            cv = paged_kv_write(cv, v, block_tables, positions)
+            new_cache = (ck, cv)
+            kv_len = positions[:, 0] + 1
+            out = ops.paged_decode_attention(q, ck, cv, block_tables, kv_len)
+        elif ops.decode_mode() == "append" and allow_append:
             # §Perf it.5: attend over the old cache [0, pos) and combine the
             # new token in closed form; the cache write happens once,
             # outside the layer scan (run_blocks), so the full cache is not

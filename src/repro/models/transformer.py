@@ -74,7 +74,13 @@ def lm_defs(cfg: ModelConfig) -> dict:
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype,
-               as_structs: bool = False, n_periods: Optional[int] = None):
+               as_structs: bool = False, n_periods: Optional[int] = None,
+               paged: bool = False, n_pages: Optional[int] = None,
+               page_size: Optional[int] = None):
+    """Stacked per-period cache. ``paged=True`` stores attention KV as a
+    shared page pool (np, N, bs, Hkv, hd) addressed via block tables
+    (serving/kvcache.py) instead of slot-contiguous (np, B, S, Hkv, hd);
+    recurrent mixer states stay slot-indexed either way."""
     np_ = n_periods if n_periods is not None else cfg.n_periods
     mk = (lambda s, dt: jax.ShapeDtypeStruct(s, dt)) if as_structs \
         else (lambda s, dt: jnp.zeros(s, dt))
@@ -83,6 +89,12 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype,
     for i, (mix, _) in enumerate(_period_plan(cfg)):
         slot = f"slot{i:02d}"
         if mix == "attn":
+            if paged:
+                assert n_pages is not None and page_size is not None
+                shp = (np_, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+                cache[slot] = {"k_pages": mk(shp, dtype),
+                               "v_pages": mk(shp, dtype)}
+                continue
             shp = (np_, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
             cache[slot] = {"k": mk(shp, dtype), "v": mk(shp, dtype)}
         elif mix == "mamba":
@@ -147,7 +159,7 @@ def head(cfg: ModelConfig, params: dict, x):
 
 
 def _period_step(cfg: ModelConfig, pslice: dict, cslice, x, positions,
-                 decode: bool, causal: bool):
+                 decode: bool, causal: bool, block_tables=None):
     aux = jnp.zeros((), jnp.float32)
     new_cache = {}
     for i, (mix, mlp) in enumerate(_period_plan(cfg)):
@@ -156,15 +168,23 @@ def _period_step(cfg: ModelConfig, pslice: dict, cslice, x, positions,
         c = cslice.get(slot) if cslice is not None else None
         xin = rmsnorm(x, sp["mixer"]["norm"], cfg.norm_eps)
         if mix == "attn":
-            kvc = (c["k"], c["v"]) if c is not None else None
+            paged = c is not None and "k_pages" in c
+            if paged:
+                kvc = (c["k_pages"], c["v_pages"])
+            else:
+                kvc = (c["k"], c["v"]) if c is not None else None
             y, nc = attn.self_attention(cfg, sp["mixer"], xin,
                                         positions=positions, causal=causal,
-                                        kv_cache=kvc, decode=decode)
+                                        kv_cache=kvc, decode=decode,
+                                        block_tables=(block_tables if paged
+                                                      else None))
             if nc is not None:
                 if isinstance(nc, tuple) and nc[0] == "append":
                     # §Perf it.5: only the new token's K/V leave the scan;
                     # run_blocks writes them into the cache once, after.
                     new_cache[slot] = {"k_new": nc[1], "v_new": nc[2]}
+                elif paged:
+                    new_cache[slot] = {"k_pages": nc[0], "v_pages": nc[1]}
                 else:
                     new_cache[slot] = {"k": nc[0], "v": nc[1]}
             elif c is not None:
@@ -193,15 +213,18 @@ def _period_step(cfg: ModelConfig, pslice: dict, cslice, x, positions,
 
 def run_blocks(cfg: ModelConfig, blocks: dict, x, positions, *,
                cache: Optional[dict] = None, decode: bool = False,
-               causal: bool = True, remat: str = "none"):
+               causal: bool = True, remat: str = "none",
+               block_tables=None):
     """Scan the stacked periods. ``blocks``/``cache`` leading dim = periods
-    (possibly a stage's slice). Returns (x, new_cache, aux_sum)."""
+    (possibly a stage's slice). ``block_tables`` (B,nb) addresses paged attn
+    pools (shared across periods — the page id axis is per-period).
+    Returns (x, new_cache, aux_sum)."""
 
     def step(carry, xs):
         h, aux = carry
         pslice, cslice = xs
         h, new_c, a = _period_step(cfg, pslice, cslice, h, positions,
-                                   decode, causal)
+                                   decode, causal, block_tables=block_tables)
         return (h, aux + a), new_c
 
     if remat == "full":

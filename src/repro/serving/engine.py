@@ -4,6 +4,14 @@ Functional twin of the DES: real JAX compute (CPU-scale models), real KV
 caches, real consolidation — `consolidated()` performs the §6.2 KV gather
 and returns a standalone engine that must continue every in-flight request
 bit-exactly (tested in tests/test_engine.py).
+
+KV layouts (``paged`` flag, default from ``ops.decode_mode()``):
+  * contiguous — per-slot (B, Smax) caches, the seed behaviour.
+  * paged — attention KV lives in a shared page pool addressed through the
+    BlockManager's per-request block tables: prefill writes into allocated
+    blocks, decode appends through ``extend``, admission defers requests
+    when ``can_allocate`` says the pool can't cover them (no MemoryError
+    mid-flight), and consolidation gathers exactly the live blocks.
 """
 
 from __future__ import annotations
@@ -18,9 +26,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops
 from repro.models.model import Model
 from repro.serving.kvcache import BlockManager
-from repro.serving.migration import gather_stage_caches
+from repro.serving.migration import (gather_stage_caches,
+                                     gather_stage_caches_with_bytes)
 from repro.serving.worker import StageWorker
 
 
@@ -35,40 +45,60 @@ class GenRequest:
     done: bool = False
 
     @property
+    def prompt_total(self) -> int:
+        """Prompt tokens incl. any prefix embeddings."""
+        return len(self.prompt) + (0 if self.prefix_embeds is None
+                                   else self.prefix_embeds.shape[0])
+
+    @property
     def pos_next(self) -> int:
         """Cache position of the next token to feed."""
-        plen = len(self.prompt) + (0 if self.prefix_embeds is None
-                                   else self.prefix_embeds.shape[0])
-        return plen + len(self.generated) - 1
+        return self.prompt_total + len(self.generated) - 1
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, stage_params: Sequence[dict],
                  max_batch: int = 4, max_seq: int = 128,
-                 block_size: int = 16):
+                 block_size: int = 16, paged: Optional[bool] = None):
         self.cfg = cfg
         self.model = Model(cfg)
-        n = len(stage_params)
-        self.workers = [StageWorker(cfg, p, n, i, max_batch, max_seq)
-                        for i, p in enumerate(stage_params)]
+        if paged is None:
+            paged = ops.decode_mode() == "paged"
+        self.paged = paged
         self.max_batch = max_batch
         self.max_seq = max_seq
-        self.slots: List[Optional[GenRequest]] = [None] * max_batch
-        self.queue: collections.deque = collections.deque()
         kv_per_tok = 2 * cfg.n_kv_heads * cfg.head_dim * \
             jnp.dtype(cfg.dtype).itemsize
+        n_blocks = max_batch * (max_seq // block_size + 1)
         self.block_mgr = BlockManager(
-            n_blocks=max_batch * (max_seq // block_size + 1),
-            block_size=block_size, bytes_per_token=max(kv_per_tok, 1))
+            n_blocks=n_blocks, block_size=block_size,
+            bytes_per_token=max(kv_per_tok, 1))
+        # one extra trash page: idle slots' block-table rows point here so
+        # their (unused) decode writes never land in a live page
+        self._null_page = n_blocks
+        self._table_width = max_seq // block_size + 1
+        n = len(stage_params)
+        self.workers = [StageWorker(cfg, p, n, i, max_batch, max_seq,
+                                    paged=paged, n_pages=n_blocks + 1,
+                                    page_size=block_size)
+                        for i, p in enumerate(stage_params)]
+        self.slots: List[Optional[GenRequest]] = [None] * max_batch
+        self.queue: collections.deque = collections.deque()
         self._rid = itertools.count()
         self.finished: List[GenRequest] = []
         self.steps = 0
+        self.last_migration_bytes: Optional[int] = None
 
     # ------------------------------------------------------------- submit
     def submit(self, prompt: Sequence[int], max_new: int,
                prefix_embeds=None) -> GenRequest:
         req = GenRequest(next(self._rid), list(prompt), max_new,
                          prefix_embeds)
+        if req.prompt_total + max_new > self.max_seq:
+            raise ValueError(
+                f"request needs {req.prompt_total + max_new} cache slots "
+                f"(prompt {req.prompt_total} + max_new {max_new}) "
+                f"> max_seq={self.max_seq}")
         self.queue.append(req)
         return req
 
@@ -76,28 +106,60 @@ class Engine:
     def _free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
 
+    def _blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_mgr.block_size)
+
+    def _can_admit(self, req: GenRequest) -> bool:
+        """Admission control: the pool must cover the prompt now *and* the
+        worst-case decode tail of every in-flight request plus this one, so
+        ``extend`` can never fail mid-flight. (submit() already bounds
+        every request to max_seq total tokens.)"""
+        if not self.block_mgr.can_allocate(req.prompt_total):
+            return False
+        reserved = 0
+        for r in self.active():
+            held = len(self.block_mgr.tables[r.rid].blocks)
+            reserved += max(0, self._blocks_for(r.prompt_total + r.max_new)
+                            - held)
+        need = self._blocks_for(req.prompt_total + req.max_new)
+        return self.block_mgr.free_blocks - reserved >= need
+
     def _admit(self):
         for slot in self._free_slots():
             if not self.queue:
                 break
+            if not self._can_admit(self.queue[0]):
+                break                     # defer until blocks free up
             req = self.queue.popleft()
             req.slot = slot
             self.slots[slot] = req
             self._prefill(req)
 
+    def _block_tables(self) -> jnp.ndarray:
+        """(B, nb) int32 page ids from the BlockManager; idle slots (and
+        tails past a request's live blocks) point at the null page."""
+        bt = np.full((self.max_batch, self._table_width), self._null_page,
+                     np.int32)
+        for r in self.active():
+            blocks = self.block_mgr.tables[r.rid].blocks
+            bt[r.slot, :len(blocks)] = blocks
+        return jnp.asarray(bt)
+
     def _prefill(self, req: GenRequest):
         tokens = jnp.asarray([req.prompt], jnp.int32)
-        plen = len(req.prompt)
         prefix = None
-        total = plen
         if req.prefix_embeds is not None:
             prefix = jnp.asarray(req.prefix_embeds)[None]
-            total += prefix.shape[1]
+        total = req.prompt_total
         positions = jnp.arange(total, dtype=jnp.int32)[None]
         self.block_mgr.allocate(req.rid, total)
+        bt = None
+        if self.paged:
+            bt = self._block_tables()[req.slot:req.slot + 1]
         h = tokens
         for w in self.workers:
-            h = w.prefill_slot(h, req.slot, positions, prefix_embeds=prefix)
+            h = w.prefill_slot(h, req.slot, positions, prefix_embeds=prefix,
+                               block_tables=bt)
         first = int(jnp.argmax(h[0, 0]))
         req.generated.append(first)
         self.block_mgr.extend(req.rid)
@@ -119,8 +181,9 @@ class Engine:
             positions[r.slot, 0] = r.pos_next
         h = jnp.asarray(tokens)
         pos = jnp.asarray(positions)
+        bt = self._block_tables() if self.paged else None
         for w in self.workers:
-            h = w.decode(h, pos)
+            h = w.decode(h, pos, block_tables=bt)
         nxt = np.asarray(jnp.argmax(h[:, 0], axis=-1))
         self.steps += 1
         for r in list(reqs):
@@ -146,13 +209,34 @@ class Engine:
             max_steps -= 1
 
     # ---------------------------------------------------- consolidation
+    def n_attn_layers(self, migrated_only: bool = False) -> int:
+        """Attention layers across the pipeline. ``migrated_only`` counts
+        only the layers whose KV crosses the network in a scale-down —
+        every stage except the surviving target (worker 0) — i.e. the
+        `n_layers` the BlockManager's migration_bytes quote refers to."""
+        per_period = sum(1 for m in self.cfg.mixer_pattern if m == "attn")
+        workers = self.workers[1:] if migrated_only else self.workers
+        return per_period * sum(p1 - p0 for p0, p1 in
+                                (w.periods for w in workers))
+
     def consolidated(self, full_params: dict) -> "Engine":
         """Scale-down: gather the distributed KV/state to one standalone
-        worker holding the full model; in-flight requests continue."""
+        worker holding the full model; in-flight requests continue. In
+        paged mode the gather is block-granular (§6.2: only the blocks the
+        BlockManager reports live move) and ``last_migration_bytes`` is the
+        exact byte count gathered."""
         eng = Engine(self.cfg, [full_params], self.max_batch, self.max_seq,
-                     self.block_mgr.block_size)
-        eng.workers[0].cache = gather_stage_caches(
-            [w.cache for w in self.workers])
+                     self.block_mgr.block_size, paged=self.paged)
+        stage_caches = [w.cache for w in self.workers]
+        if self.paged:
+            live = self.block_mgr.blocks_of(r.rid for r in self.active())
+            cache, moved = gather_stage_caches_with_bytes(
+                stage_caches, live_blocks=live, target_stage=0)
+            self.last_migration_bytes = moved
+            eng.last_migration_bytes = moved
+        else:
+            cache = gather_stage_caches(stage_caches)
+        eng.workers[0].cache = cache
         eng.slots = list(self.slots)
         eng.queue = self.queue
         eng.block_mgr = self.block_mgr
@@ -167,5 +251,6 @@ class Engine:
         others = []
         for _ in range(1, len(self.workers)):
             others.append(Engine(self.cfg, [full_params], self.max_batch,
-                                 self.max_seq, self.block_mgr.block_size))
+                                 self.max_seq, self.block_mgr.block_size,
+                                 paged=self.paged))
         return [first] + others

@@ -1,9 +1,13 @@
 """Paged-KV block bookkeeping (vLLM-style block manager).
 
-The engine computes against slot-contiguous caches (CPU-scale models);
-the BlockManager tracks the *paged* accounting the paper's KV-migration
-queries (§6.2: "query the cache block manager to obtain the blocks used by
-existing requests") and provides byte counts for migration costs.
+In paged mode (Engine(paged=True)) the BlockManager IS the serving memory
+system: the block ids it hands out index the workers' shared page pools,
+prefill/decode write through them, admission consults ``can_allocate``,
+and §6.2 KV-migration gathers exactly ``blocks_of`` the in-flight
+requests ("query the cache block manager to obtain the blocks used by
+existing requests"). In the slot-contiguous layout it remains the paged
+*accounting* twin of the contiguous caches and quotes migration byte
+costs.
 """
 
 from __future__ import annotations

@@ -2,30 +2,76 @@
 
 In the engine the gather is a period-axis concatenation of the stage caches
 (paper: blocks collected with a gather primitive and 'placed at different
-layers, according to which worker it comes from')."""
+layers, according to which worker it comes from').
+
+With the paged layout the gather is *block-granular*: only the pages named
+by the block manager's tables for in-flight requests are shipped, and
+``gather_stage_caches_with_bytes`` reports exactly the bytes moved — the
+ground truth the block manager's ``migration_bytes`` estimate must match.
+"""
 
 from __future__ import annotations
 
-from typing import List
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 
-def gather_stage_caches(stage_caches: List[dict]) -> dict:
+def gather_stage_caches_with_bytes(
+        stage_caches: List[dict],
+        live_blocks: Optional[Sequence[int]] = None,
+        target_stage: int = 0) -> Tuple[dict, int]:
+    """Concatenate stage cache trees along the leading (period) axis.
+
+    Paged attention pools (``k_pages``/``v_pages`` leaves) are gathered at
+    block granularity when ``live_blocks`` is given: each stage ships only
+    its live pages, which land at the *same* page ids in the target pool
+    (block ids are global — the engine's BlockManager is shared by every
+    stage). Returns (gathered cache, KV bytes that cross the network):
+    the ``target_stage`` (the worker that survives the scale-down) already
+    holds its own pages, so only the other stages' live pages count.
+    Non-page leaves (recurrent states, slot-contiguous KV) are
+    concatenated whole and not counted.
+    """
+    out: dict = {}
+    moved = 0
+    live = None
+    if live_blocks is not None:
+        live = jnp.asarray(sorted(live_blocks), jnp.int32)
+    for name in stage_caches[0].keys():
+        sub = [c[name] for c in stage_caches]
+        if live is not None and "k_pages" in sub[0]:
+            merged = {}
+            for leaf_name in sub[0]:
+                parts = [c[leaf_name][:, live] for c in sub]
+                moved += sum(int(p.nbytes) for i, p in enumerate(parts)
+                             if i != target_stage)
+                stacked = jnp.concatenate(parts, axis=0)
+                pool = jnp.zeros((stacked.shape[0],)
+                                 + sub[0][leaf_name].shape[1:],
+                                 sub[0][leaf_name].dtype)
+                merged[leaf_name] = pool.at[:, live].set(stacked)
+            out[name] = merged
+        else:
+            out[name] = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *sub)
+    return out, moved
+
+
+def gather_stage_caches(stage_caches: List[dict],
+                        live_blocks: Optional[Sequence[int]] = None) -> dict:
     """Concatenate stage cache trees along the leading (period) axis."""
-    out = {}
-    keys = stage_caches[0].keys()
-    for k in keys:
-        sub = [c[k] for c in stage_caches]
-        out[k] = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *sub)
-    return out
+    cache, _ = gather_stage_caches_with_bytes(stage_caches, live_blocks)
+    return cache
 
 
 def migration_bytes(stage_caches: List[dict], request_slots,
                     lengths) -> int:
-    """Bytes that cross the network in a scale-down migration: every stage
-    except the target ships its slots' live KV/state."""
+    """Analytic estimate (slot-contiguous layout) of the bytes that cross
+    the network in a scale-down migration: every stage except the target
+    ships its slots' live KV/state. The paged path doesn't estimate — see
+    ``gather_stage_caches_with_bytes``."""
     total = 0
     for c in stage_caches[1:]:
         for leaf in jax.tree.leaves(c):

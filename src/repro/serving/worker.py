@@ -1,14 +1,21 @@
 """Stage worker: holds one pipeline stage's parameter slice and the KV/state
 cache for its periods; executes stage-local prefill/decode with jitted fns.
 
+Two attention KV layouts:
+  * slot-contiguous (default): (P, B, Smax, Hkv, hd) per attn period.
+  * paged: a shared page pool (P, N, bs, Hkv, hd) addressed through
+    per-request block tables handed in by the engine's BlockManager —
+    prefill scatters prompt K/V into allocated pages, decode appends
+    through the same tables. Recurrent states (mamba/rwkv) stay
+    slot-indexed in both layouts.
+
 Decoder-only families. Encoder-decoder (whisper) serves single-worker —
 see DESIGN.md §5.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +27,9 @@ from repro.models.model import Model
 
 class StageWorker:
     def __init__(self, cfg: ModelConfig, stage_params: dict, n_stages: int,
-                 stage: int, max_batch: int, max_seq: int):
+                 stage: int, max_batch: int, max_seq: int,
+                 paged: bool = False, n_pages: Optional[int] = None,
+                 page_size: Optional[int] = None):
         assert not cfg.is_encdec or n_stages == 1, \
             "enc-dec serves single-worker (DESIGN.md §5)"
         self.cfg = cfg
@@ -34,16 +43,21 @@ class StageWorker:
         self.params = stage_params
         self.max_batch = max_batch
         self.max_seq = max_seq
+        self.paged = paged
+        self.n_pages = n_pages
+        self.page_size = page_size
         dt = jnp.dtype(cfg.dtype)
-        self.cache = transformer.init_cache(cfg, max_batch, max_seq, dt,
-                                            n_periods=p1 - p0)
+        self.cache = transformer.init_cache(
+            cfg, max_batch, max_seq, dt, n_periods=p1 - p0, paged=paged,
+            n_pages=n_pages, page_size=page_size)
         self._prefill_fn = jax.jit(self._prefill_impl,
                                    static_argnames=("with_prefix",))
         self._decode_fn = jax.jit(self._decode_impl)
 
     # ----------------------------------------------------------- impl fns
     def _prefill_impl(self, params, x_in, positions, fresh_cache,
-                      prefix_embeds=None, *, with_prefix=False):
+                      block_tables=None, prefix_embeds=None, *,
+                      with_prefix=False):
         cfg = self.cfg
         if self.first:
             x = transformer.embed(cfg, params, x_in, positions,
@@ -53,11 +67,13 @@ class StageWorker:
         else:
             x = x_in
         x, new_cache, _ = transformer.run_blocks(
-            cfg, params["blocks"], x, positions, cache=fresh_cache)
+            cfg, params["blocks"], x, positions, cache=fresh_cache,
+            block_tables=block_tables)
         out = transformer.head(cfg, params, x[:, -1:]) if self.last else x
         return out, new_cache
 
-    def _decode_impl(self, params, x_in, positions, cache):
+    def _decode_impl(self, params, x_in, positions, cache,
+                     block_tables=None):
         cfg = self.cfg
         if self.first:
             x = transformer.embed(cfg, params, x_in, positions,
@@ -65,37 +81,67 @@ class StageWorker:
         else:
             x = x_in
         x, new_cache, _ = transformer.run_blocks(
-            cfg, params["blocks"], x, positions, cache=cache, decode=True)
+            cfg, params["blocks"], x, positions, cache=cache, decode=True,
+            block_tables=block_tables)
         out = transformer.head(cfg, params, x) if self.last else x
         return out, new_cache
 
     # ------------------------------------------------------------ public
-    def prefill_slot(self, x_in, slot: int, positions, prefix_embeds=None):
+    def prefill_slot(self, x_in, slot: int, positions, prefix_embeds=None,
+                     block_tables=None):
         """Prefill one request (batch 1 inputs) into cache slot `slot`.
         Recurrent states start from zero (fresh cache), then results are
-        scattered into the live batched cache."""
+        scattered into the live batched cache. Paged attention KV is
+        written straight into the shared page pool at the blocks named by
+        ``block_tables`` (1, nb)."""
         p0, p1 = self.periods
-        seq = positions.shape[1]
         dt = jnp.dtype(self.cfg.dtype)
-        fresh = transformer.init_cache(self.cfg, 1, self.max_seq, dt,
-                                       n_periods=p1 - p0)
+        # in paged mode only the recurrent slots start fresh at batch 1
+        # (n_pages=1 keeps the throwaway attn pools tiny); attn slots
+        # compute against the live shared pools
+        fresh = transformer.init_cache(
+            self.cfg, 1, self.max_seq, dt, n_periods=p1 - p0,
+            paged=self.paged, n_pages=1 if self.paged else None,
+            page_size=1 if self.paged else None)
+        if self.paged:
+            fresh = {name: (self.cache[name] if "k_pages" in self.cache[name]
+                            else fresh[name])
+                     for name in self.cache}
         out, one_cache = self._prefill_fn(self.params, x_in, positions,
-                                          fresh, prefix_embeds,
+                                          fresh, block_tables, prefix_embeds,
                                           with_prefix=prefix_embeds is not None)
-        self.cache = jax.tree.map(
-            lambda full, one: jax.lax.dynamic_update_slice(
+
+        def scatter(full, one):
+            return jax.lax.dynamic_update_slice(
                 full, one.astype(full.dtype),
-                (0, slot) + (0,) * (full.ndim - 2)),
-            self.cache, one_cache)
+                (0, slot) + (0,) * (full.ndim - 2))
+
+        if self.paged:
+            merged = {}
+            for name, sub in one_cache.items():
+                if "k_pages" in sub:      # pool already updated in-place
+                    merged[name] = sub
+                else:
+                    merged[name] = jax.tree.map(scatter, self.cache[name],
+                                                sub)
+            self.cache = merged
+        else:
+            self.cache = jax.tree.map(scatter, self.cache, one_cache)
         return out
 
-    def decode(self, x_in, positions):
+    def decode(self, x_in, positions, block_tables=None):
         out, self.cache = self._decode_fn(self.params, x_in, positions,
-                                          self.cache)
+                                          self.cache, block_tables)
         return out
 
     def clear_slot(self, slot: int):
-        """Zero a slot's recurrent state (attn KV needs no clear: masked)."""
-        self.cache = jax.tree.map(
-            lambda a: a.at[:, slot].set(jnp.zeros_like(a[:, slot])),
-            self.cache)
+        """Zero a slot's recurrent state (attn KV needs no clear: contiguous
+        caches are masked by kv_len; paged pools are unreachable once the
+        block table row is freed)."""
+
+        def clr(a):
+            return a.at[:, slot].set(jnp.zeros_like(a[:, slot]))
+
+        self.cache = {name: (sub if "k_pages" in sub
+                             else jax.tree.map(clr, sub))
+                      for name, sub in self.cache.items()}

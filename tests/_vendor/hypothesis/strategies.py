@@ -1,0 +1,88 @@
+"""Strategy combinators for the vendored hypothesis shim (see __init__)."""
+
+from __future__ import annotations
+
+import random
+from typing import Sequence
+
+
+class SearchStrategy:
+    def example(self, rnd: random.Random):
+        raise NotImplementedError
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value: float, max_value: float):
+        self.min_value = min_value
+        self.max_value = max_value
+
+    def example(self, rnd):
+        # hit the endpoints occasionally — they are the classic bug nests
+        r = rnd.random()
+        if r < 0.05:
+            return self.min_value
+        if r < 0.1:
+            return self.max_value
+        return rnd.uniform(self.min_value, self.max_value)
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value: int, max_value: int):
+        self.min_value = min_value
+        self.max_value = max_value
+
+    def example(self, rnd):
+        return rnd.randint(self.min_value, self.max_value)
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements: SearchStrategy, min_size: int = 0,
+                 max_size: int = 10):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+
+    def example(self, rnd):
+        n = rnd.randint(self.min_size, self.max_size)
+        return [self.elements.example(rnd) for _ in range(n)]
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, options: Sequence):
+        self.options = list(options)
+
+    def example(self, rnd):
+        return rnd.choice(self.options)
+
+
+class DataObject:
+    def __init__(self, rnd: random.Random):
+        self._rnd = rnd
+
+    def draw(self, strategy: SearchStrategy, label=None):
+        return strategy.example(self._rnd)
+
+
+class _Data(SearchStrategy):
+    def example(self, rnd):
+        return DataObject(rnd)
+
+
+def floats(min_value, max_value):
+    return _Floats(min_value, max_value)
+
+
+def integers(min_value, max_value):
+    return _Integers(min_value, max_value)
+
+
+def lists(elements, min_size=0, max_size=10):
+    return _Lists(elements, min_size, max_size)
+
+
+def sampled_from(options):
+    return _SampledFrom(options)
+
+
+def data():
+    return _Data()

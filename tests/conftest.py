@@ -1,9 +1,16 @@
 import os
+import sys
+from pathlib import Path
 
 # kernels dispatch to the jnp reference on CPU; tests that want interpret
 # mode set it explicitly. (Do NOT set XLA device-count flags here — smoke
 # tests and benches must see the single real device.)
 os.environ.setdefault("REPRO_KERNEL_BACKEND", "ref")
+
+try:                                     # real hypothesis when installed...
+    import hypothesis  # noqa: F401
+except ImportError:                      # ...else the deterministic shim
+    sys.path.insert(0, str(Path(__file__).resolve().parent / "_vendor"))
 
 import dataclasses
 

@@ -48,6 +48,20 @@ def test_each_optimization_never_hurts(fetch, load):
     assert full <= stream + 1e-6 or math.isclose(full, stream, rel_tol=1e-6)
 
 
+@settings(max_examples=40, deadline=None)
+@given(fetch=st.floats(0.1, 60.0), load=st.floats(0.05, 10.0))
+def test_no_prefetch_fetch_waits_for_runtime_init(fetch, load):
+    """Without prefetch, fetch starts only after the FULL runtime init
+    (lib and cuda), in either init order; all spans are well-formed."""
+    for overlap in (False, True):
+        fl = OverlapFlags(prefetch=False, stream=False, overlap_load=overlap)
+        tl = worker_timeline(T, fetch, load, flags=fl)
+        runtime_end = max(tl.spans["lib"][1], tl.spans["cuda"][1])
+        assert tl.spans["fetch"][0] >= runtime_end - 1e-12
+        assert all(s0 <= s1 for s0, s1 in tl.spans.values())
+        assert tl.ready >= max(s1 for _, s1 in tl.spans.values()) - 1e-12
+
+
 def test_group_ttft_full_memory_pipeline():
     ready = (5.0, 6.0, 5.5, 5.8)
     got = group_ttft(ready, s=4, w=4, t=T)

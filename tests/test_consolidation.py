@@ -1,5 +1,7 @@
 """Consolidation policy + sliding-window predictor (§6.1)."""
 
+import pytest
+
 from repro.core.consolidation import (ConsolidationPolicy,
                                       SlidingWindowPredictor)
 
@@ -39,3 +41,27 @@ def test_required_workers_floor():
     pred = SlidingWindowPredictor(60.0)
     pol = ConsolidationPolicy(pred, per_worker_capacity=8)
     assert pol.required_workers("m", 0, 0.0) == 1
+
+
+@pytest.mark.parametrize("max_pp", [1, 2, 4])
+def test_plan_scale_down_group_is_max_pp(max_pp):
+    pol = ConsolidationPolicy(SlidingWindowPredictor(60.0),
+                              per_worker_capacity=8)
+    plan = pol.plan("m", queue_len=0, now=0.0, max_pp=max_pp,
+                    current_workers=1)
+    assert plan.mode == "down"
+    assert plan.group_sizes == (max_pp,)
+
+
+@pytest.mark.parametrize("max_pp", [1, 2, 4])
+@pytest.mark.parametrize("queue_len", [9, 17, 25, 33, 56])
+def test_plan_scale_up_groups_cover_deficit_exactly(max_pp, queue_len):
+    """Groups must sum to the deficit (no g=2 overshoot on odd remainders)
+    and each group must fit the placement's max_pp."""
+    pol = ConsolidationPolicy(SlidingWindowPredictor(60.0),
+                              per_worker_capacity=8)
+    plan = pol.plan("m", queue_len=queue_len, now=0.0, max_pp=max_pp,
+                    current_workers=0)
+    assert plan.mode == "up"
+    assert sum(plan.group_sizes) == plan.keep_workers
+    assert all(1 <= g <= max_pp for g in plan.group_sizes)

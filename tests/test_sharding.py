@@ -10,7 +10,8 @@ from repro.distributed.sharding import (DEFAULT_RULES, constrain, resolve,
 
 
 def test_resolve_outside_mesh_uses_defaults():
-    assert resolve(("batch", "seq", "embed")) == P(("data",))
+    # singleton physical-axis tuples normalize to the bare name
+    assert resolve(("batch", "seq", "embed")) == P("data")
     assert resolve(("embed", "ffn")) == P(None, "model")
 
 
@@ -18,7 +19,7 @@ def test_resolve_dedupes_physical_axes():
     # act_seq and heads both -> 'model' under train rules: first wins
     with use_mesh(None, {"act_seq": "model"}):
         spec = resolve(("batch", "act_seq", "heads"))
-    assert spec == P(("data",), "model")
+    assert spec == P("data", "model")
 
 
 def test_rules_dropped_for_missing_axes():
