@@ -1,0 +1,78 @@
+"""Engine micro-benchmark: prefill latency and decode throughput of the
+real JAX serving engine, contiguous vs paged KV layout, on the reduced
+CPU config. Writes ``BENCH_engine.json`` (path overridable via argv[1])
+so the perf trajectory is tracked across PRs.
+
+    PYTHONPATH=src python benchmarks/bench_engine.py [out.json]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import jax
+
+from repro.configs import get_config, smoke_variant
+from repro.models import build_model
+from repro.serving.api import SamplingParams
+from repro.serving.endpoint import ServingEndpoint
+from repro.serving.engine import Engine
+
+BATCH = 4
+PROMPT_LEN = 16
+N_DECODE = 16
+
+
+def bench_layout(cfg, params, paged: bool) -> dict:
+    ep = ServingEndpoint(Engine(cfg, [params], max_batch=BATCH,
+                                max_seq=96, paged=paged))
+    # max_new keeps every request resident past the timed window, so the
+    # measured steps are pure full-batch decode (no finish/clear_slot cost)
+    for i in range(BATCH):
+        ep.submit([1 + i] * PROMPT_LEN,
+                  SamplingParams(max_new=N_DECODE + 4))
+    # step 1 = BATCH prefills + the first batched decode, both cold (the
+    # engine decodes newly admitted requests in the same step), so this
+    # number includes prefill AND decode jit compiles
+    t0 = time.perf_counter()
+    ep.step()
+    first_step_cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(N_DECODE):
+        ep.step()
+    decode_s = time.perf_counter() - t0
+    return {
+        "layout": "paged" if paged else "contiguous",
+        "batch": BATCH,
+        "prompt_len": PROMPT_LEN,
+        "first_step_cold_s": first_step_cold_s,
+        "decode_steps_per_s": N_DECODE / decode_s,
+        "decode_step_ms": decode_s / N_DECODE * 1e3,
+    }
+
+
+def main(out_path: str = "BENCH_engine.json"):
+    cfg = smoke_variant(get_config("granite-3-8b"))
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    results = [bench_layout(cfg, params, paged) for paged in (False, True)]
+    report = {
+        "bench": "engine-smoke",
+        "model": cfg.name,
+        "device": jax.devices()[0].platform,
+        "results": results,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    for r in results:
+        print(f"{r['layout']:>10}: first step (cold, prefill+decode) "
+              f"{r['first_step_cold_s']*1e3:.0f}ms"
+              f"  decode {r['decode_steps_per_s']:.1f} steps/s"
+              f" ({r['decode_step_ms']:.1f} ms/step, batch={r['batch']})")
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:2])

@@ -13,6 +13,8 @@ import jax
 from benchmarks.common import Bench
 from repro.configs import get_config, smoke_variant
 from repro.models import build_model
+from repro.serving.api import SamplingParams
+from repro.serving.endpoint import ServingEndpoint
 from repro.serving.engine import Engine
 from repro.workloads.applications import WARM
 
@@ -25,16 +27,16 @@ def run(bench: Bench):
     cfg = smoke_variant(get_config("granite-3-8b"))
     m = build_model(cfg)
     params = m.init(jax.random.PRNGKey(0))
-    eng = Engine(cfg, [params], max_batch=8, max_seq=96)
+    ep = ServingEndpoint(Engine(cfg, [params], max_batch=8, max_seq=96))
     for i in range(8):
-        eng.submit([1 + i] * 32, 2)
+        ep.submit([1 + i] * 32, SamplingParams(max_new=10))
     t0 = time.perf_counter()
-    eng.step()                     # 8 prefills (batch like Table 1)
+    ep.step()                      # 8 prefills (batch like Table 1)
     prefill_s = time.perf_counter() - t0
     t0 = time.perf_counter()
     n_dec = 8
     for _ in range(n_dec):
-        eng.step()
+        ep.step()
     decode_s = (time.perf_counter() - t0) / n_dec
     bench.add("table1/engine-smoke/prefill8x32", prefill_s,
               "real JAX engine, reduced config, CPU")

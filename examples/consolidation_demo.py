@@ -1,8 +1,9 @@
 """Pipeline-consolidation deep dive (paper §6, Fig. 13): serve one long
 generation on a 4-stage pipeline, scale DOWN mid-flight, and show the
 per-token latency profile before/after the KV migration. Uses the real JAX
-engine (reduced-config jamba — the hybrid arch migrates attention KV *and*
-Mamba/conv recurrent state).
+endpoint API (reduced-config jamba — the hybrid arch migrates attention KV
+*and* Mamba/conv recurrent state), and the swap happens behind the stable
+ServingEndpoint handle.
 
     PYTHONPATH=src python examples/consolidation_demo.py
 """
@@ -13,6 +14,8 @@ import jax
 
 from repro.configs import get_config, smoke_variant
 from repro.models import build_model
+from repro.serving.api import SamplingParams
+from repro.serving.endpoint import ServingEndpoint
 from repro.serving.engine import Engine
 from repro.serving.migration import gather_stage_caches
 
@@ -26,29 +29,29 @@ stage_params = [model.slice_stage_params(params, n_stages, i)
 print(f"{cfg.name}: {cfg.n_layers} layers in {n_stages} stages; per-stage "
       f"fetch bytes: {[model.stage_bytes(n_stages, i) for i in range(n_stages)]}")
 
-eng = Engine(cfg, stage_params, max_batch=2, max_seq=96)
-req = eng.submit(list(range(2, 18)), max_new=24)
+ep = ServingEndpoint(Engine(cfg, stage_params, max_batch=2, max_seq=96))
+req = ep.submit(list(range(2, 18)), SamplingParams(max_new=24))
 
 lat = []
 for step in range(8):
     t0 = time.perf_counter()
-    eng.step()
+    ep.step()
     lat.append(time.perf_counter() - t0)
 print(f"pipeline tokens: {req.generated}")
 print(f"pipeline per-step wall: {[f'{x*1e3:.0f}ms' for x in lat]}")
 
 t0 = time.perf_counter()
-gathered = gather_stage_caches([w.cache for w in eng.workers])
+gathered = gather_stage_caches([w.cache for w in ep.engine.workers])
 mig_wall = time.perf_counter() - t0
 n_bytes = sum(x.nbytes for x in jax.tree.leaves(gathered))
 print(f"KV+state migration: {n_bytes/1e6:.2f} MB gathered in "
       f"{mig_wall*1e3:.1f} ms (host)")
 
-eng = eng.consolidated(params)
+ep.consolidate(params)                   # same handle, standalone engine
 lat2 = []
 while req.generated and not req.done:
     t0 = time.perf_counter()
-    eng.step()
+    ep.step()
     lat2.append(time.perf_counter() - t0)
     if len(lat2) > 40:
         break
@@ -56,8 +59,10 @@ print(f"standalone tokens: {req.generated}")
 print(f"standalone per-step wall: {[f'{x*1e3:.0f}ms' for x in lat2[:8]]}")
 
 # correctness: the full run must equal a never-pipelined run
-ref = Engine(cfg, [params], max_batch=2, max_seq=96)
-r2 = ref.submit(list(range(2, 18)), max_new=24)
+ref = ServingEndpoint(Engine(cfg, [params], max_batch=2, max_seq=96))
+r2 = ref.submit(list(range(2, 18)), SamplingParams(max_new=24))
 ref.run()
 assert r2.generated == req.generated
-print("OK: scale-down preserved the generation exactly")
+print("OK: scale-down preserved the generation exactly "
+      f"(ttft={req.metrics.ttft_steps} steps, "
+      f"tpot-proxy={req.metrics.tpot_steps:.2f} steps/token)")

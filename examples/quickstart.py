@@ -1,10 +1,8 @@
-"""Quickstart: hydra cold start end-to-end on CPU.
+"""Quickstart: hydra cold start end-to-end on CPU, against one API.
 
-1. 'Upload' a small model to the registry (reduced granite config).
-2. The controller picks a pipeline-parallel cold-start scheme (Alg. 1).
-3. Stage workers fetch their slices and serve a request as a pipeline.
-4. Pipeline consolidation (scale-down) migrates the KV cache to one
-   standalone worker mid-generation — tokens must be unchanged.
+The ServerlessFrontend runs Alg. 1 and hands back a ServingEndpoint; the
+endpoint serves, then consolidates (§6.2) behind the same handle — the
+client never sees the pipeline group dissolve.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,49 +10,38 @@
 import jax
 
 from repro.configs import get_config, smoke_variant
-from repro.core import (GB, Gbps, CentralController, ModelProfile,
-                        ServerSpec, SLO, TimingProfile)
+from repro.core import GB, Gbps, ModelProfile, ServerSpec, SLO, TimingProfile
 from repro.models import build_model
+from repro.serving.api import SamplingParams
+from repro.serving.endpoint import ServerlessFrontend, ServingEndpoint
 from repro.serving.engine import Engine
 
-# --- 1. registry ---------------------------------------------------------
 cfg = smoke_variant(get_config("granite-3-8b"))
-model = build_model(cfg)
-params = model.init(jax.random.PRNGKey(0))
-print(f"model: {cfg.name}  ({model.bytes()/1e6:.1f} MB synthetic weights)")
+params = build_model(cfg).init(jax.random.PRNGKey(0))
 
-# --- 2. cluster-level planning (Alg. 1 + Alg. 2) -------------------------
-servers = {f"srv{i}": ServerSpec(f"srv{i}", 16 * Gbps, 12e9, 24 * GB)
-           for i in range(4)}
-controller = CentralController(servers)
-controller.register_model(ModelProfile(
+front = ServerlessFrontend({f"srv{i}": ServerSpec(f"srv{i}", 16 * Gbps,
+                                                  12e9, 24 * GB)
+                            for i in range(4)})
+front.deploy(cfg, params, ModelProfile(
     cfg.name, int(12.5 * GB),            # pretend it's the real Llama2-7B
     TimingProfile(), SLO(ttft=7.5, tpot=0.2)))
-scheme = controller.plan_cold_start(cfg.name,
-                                    {s: 24 * GB for s in servers}, now=0.0)
-print(f"Alg.1 scheme: s={scheme.s} w={scheme.w} servers={scheme.servers} "
-      f"pred_ttft={scheme.predicted_ttft:.2f}s "
-      f"pred_tpot={scheme.predicted_tpot*1e3:.0f}ms slo_ok={scheme.slo_ok}")
 
-# --- 3. pipeline-parallel serving ----------------------------------------
-n_stages = max(scheme.s, 2)
-stage_params = [model.slice_stage_params(params, n_stages, i)
-                for i in range(n_stages)]
-for i in range(n_stages):
-    print(f"  stage {i}: fetches {model.stage_bytes(n_stages, i)/1e6:.1f} MB")
-eng = Engine(cfg, stage_params, max_batch=2, max_seq=64)
-req = eng.submit([11, 42, 7, 13, 5], max_new=12)
+ep = front.cold_start(cfg.name, min_stages=2, max_batch=2, max_seq=64)
+print(f"Alg.1 scheme: s={ep.scheme.s} w={ep.scheme.w} "
+      f"servers={ep.scheme.servers} -> {ep.n_stages}-stage pipeline, "
+      f"pred_ttft={ep.scheme.predicted_ttft:.2f}s slo_ok={ep.scheme.slo_ok}")
 
-# --- 4. consolidation mid-generation -------------------------------------
+req = ep.submit([11, 42, 7, 13, 5], SamplingParams(max_new=12))
 for _ in range(5):
-    eng.step()
+    ep.step()
 print(f"tokens before consolidation: {req.generated}")
-eng = eng.consolidated(params)        # KV gather -> standalone worker
-eng.run()
-print(f"tokens after consolidation:  {req.generated}")
+ep.consolidate(front.full_params(cfg.name))   # §6.2, same handle
+ep.run()
+print(f"tokens after consolidation:  {req.generated} "
+      f"({req.finish_reason.value}, ttft={req.metrics.ttft_steps} steps)")
 
-ref = Engine(cfg, [params], max_batch=2, max_seq=64)
-rref = ref.submit([11, 42, 7, 13, 5], max_new=12)
-ref.run()
-assert rref.generated == req.generated, "consolidation changed the output!"
-print("OK: pipeline + consolidation output == single-worker reference")
+ref = ServingEndpoint(Engine(cfg, [params], max_batch=2, max_seq=64))
+tokens = [ev.token for ev in ref.generate([11, 42, 7, 13, 5],
+                                          SamplingParams(max_new=12))]
+assert tokens == req.generated, "consolidation changed the output!"
+print("OK: endpoint output == single-worker reference across consolidation")

@@ -36,9 +36,12 @@ class CentralController:
         self.predictor.record(model, now)
 
     # ------------------------------------------------------- cold starts
-    def plan_cold_start(self, model_name: str, free_hbm: Dict[str, int],
-                        now: float, queue_wait: float = 0.0,
+    def plan_cold_start(self, model_name: str,
+                        free_hbm: Optional[Dict[str, int]] = None,
+                        now: float = 0.0, queue_wait: float = 0.0,
                         force_s: Optional[int] = None) -> ColdStartScheme:
+        if free_hbm is None:              # idle cluster: all HBM available
+            free_hbm = {sid: s.hbm_bytes for sid, s in self.servers.items()}
         model = self.models[model_name]
         if self.max_pp_cap is not None:
             import dataclasses

@@ -1,0 +1,138 @@
+"""Request-lifecycle types for the serving API (§6.2 endpoint abstraction).
+
+Everything a caller needs to drive a generation without reaching into the
+engine: ``SamplingParams`` describe *how* to decode, ``TokenEvent`` /
+``StepOutput`` stream *what* was decoded, ``FinishReason`` says *why* a
+request stopped, and ``RequestMetrics`` records the per-request lifecycle
+in scheduler steps (the engine's time unit — wall-clock belongs to the
+benchmarks).
+
+Determinism contract: :func:`sample_token` keys its PRNG only on
+``(seed, token_index)``, never on batch position, slot, KV layout, or
+engine identity — so a request's token stream survives continuous-batching
+reshuffles and §6.2 consolidation bit-exactly, and ``temperature=0``
+reduces to the plain ``argmax`` the pre-lifecycle engine used.
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class FinishReason(str, enum.Enum):
+    LENGTH = "length"            # hit SamplingParams.max_new
+    EOS = "eos"                  # emitted SamplingParams.eos_token
+    STOP_TOKEN = "stop_token"    # emitted one of SamplingParams.stop_tokens
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Decode policy for one request. The default is greedy argmax with
+    length-only termination — the legacy engine behaviour, bit-exact."""
+    max_new: int = 16
+    temperature: float = 0.0     # <= 0 means greedy argmax
+    top_k: int = 0               # 0 means the full vocab
+    seed: int = 0                # PRNG seed for temperature > 0
+    eos_token: Optional[int] = None
+    stop_tokens: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        if self.top_k < 0:
+            raise ValueError("top_k must be >= 0")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+@dataclass
+class RequestMetrics:
+    """Lifecycle counters in scheduler steps.
+
+    ``ttft_steps`` is submit -> first token (1 for a request admitted at
+    the very next step); ``queue_steps`` is the deferred-admission part of
+    that wait; ``tpot_steps`` is the decode-steps-per-generated-token
+    proxy (1.0 when the request decoded every step it was resident).
+    """
+    submit_step: int = 0
+    admit_step: Optional[int] = None      # step of prefill / first token
+    finish_step: Optional[int] = None
+    decode_steps: int = 0                 # decode passes it took part in
+    n_tokens: int = 0                     # tokens emitted so far
+
+    @property
+    def ttft_steps(self) -> Optional[int]:
+        if self.admit_step is None:
+            return None
+        return self.admit_step - self.submit_step
+
+    @property
+    def queue_steps(self) -> Optional[int]:
+        ttft = self.ttft_steps
+        return None if ttft is None else ttft - 1
+
+    @property
+    def tpot_steps(self) -> Optional[float]:
+        if self.n_tokens <= 1:
+            return None
+        return self.decode_steps / (self.n_tokens - 1)
+
+
+@dataclass(frozen=True)
+class TokenEvent:
+    """One newly emitted token. ``finish_reason`` is set on a request's
+    final token (the token itself is still part of the output)."""
+    rid: int
+    token: int
+    finish_reason: Optional[FinishReason] = None
+
+
+@dataclass(frozen=True)
+class StepOutput:
+    """What one ``Engine.step()`` produced, in emission order: prefill
+    tokens of newly admitted requests first (admission order), then one
+    decode token per resident request (slot order)."""
+    step: int
+    events: Tuple[TokenEvent, ...]
+    finished: Tuple[int, ...]             # rids that finished this step
+    num_active: int                       # residents after the step
+    num_queued: int                       # still waiting for admission
+
+
+@dataclass(frozen=True)
+class RequestOutput:
+    """Immutable summary of a finished (or in-flight) request."""
+    rid: int
+    prompt: Tuple[int, ...]
+    token_ids: Tuple[int, ...]
+    finish_reason: Optional[FinishReason]
+    metrics: RequestMetrics
+
+    @property
+    def done(self) -> bool:
+        return self.finish_reason is not None
+
+
+def sample_token(logits, params: SamplingParams, token_index: int) -> int:
+    """Pick the next token from 1-D ``logits``.
+
+    Greedy (``temperature <= 0``) is plain ``argmax`` — bit-exact with the
+    pre-lifecycle engine. Otherwise: temperature-scaled, optionally top-k
+    truncated, seeded categorical whose key depends only on
+    ``(params.seed, token_index)`` (see module docstring).
+    """
+    if params.greedy:
+        return int(jnp.argmax(logits))
+    scaled = jnp.asarray(logits, jnp.float32) / params.temperature
+    if params.top_k and params.top_k < scaled.shape[-1]:
+        kth = jax.lax.top_k(scaled, params.top_k)[0][-1]
+        scaled = jnp.where(scaled >= kth, scaled, -jnp.inf)
+    key = jax.random.fold_in(jax.random.PRNGKey(params.seed), token_index)
+    return int(jax.random.categorical(key, scaled))

@@ -1,0 +1,160 @@
+"""Stable serving endpoints (§6.2) and the serverless frontend.
+
+HydraServe's client-facing abstraction is the *serving endpoint*: pipeline
+groups consolidate and scale behind it, clients never see the swap. A
+``ServingEndpoint`` is that stable handle — it owns the backing
+``Engine``(s), proxies the request-lifecycle API (serving/api.py), and
+performs consolidation / scale-up *in place*: the handle the caller holds
+keeps working, in-flight requests continue bit-exactly, and the retired
+source engine raises on use instead of silently corrupting block tables
+it no longer owns.
+
+``ServerlessFrontend`` glues the control plane to the data plane: it
+registers model profiles with the ``CentralController``, and on a cold
+start runs Alg. 1 (``plan_cold_start``), slices stage parameters for the
+chosen pipeline degree, and hands back a live endpoint.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional, Sequence, Union
+
+from repro.configs.base import ModelConfig
+from repro.core.controller import CentralController
+from repro.core.types import ColdStartScheme, ModelProfile, ServerSpec
+from repro.models import build_model
+from repro.serving.api import SamplingParams, StepOutput, TokenEvent
+from repro.serving.engine import Engine, GenRequest
+
+
+class ServingEndpoint:
+    """Stable handle over a (possibly re-forming) engine. All serving
+    traffic goes through the endpoint; ``consolidate``/``scale_up`` swap
+    the backing engine without invalidating the handle."""
+
+    def __init__(self, engine: Engine,
+                 scheme: Optional[ColdStartScheme] = None):
+        self._engine = engine
+        self.scheme = scheme              # Alg.1 plan that built us, if any
+
+    # -------------------------------------------------------- delegation
+    @property
+    def engine(self) -> Engine:
+        """The live backing engine (raw-engine escape hatch)."""
+        return self._engine
+
+    @property
+    def cfg(self) -> ModelConfig:
+        return self._engine.cfg
+
+    @property
+    def paged(self) -> bool:
+        return self._engine.paged
+
+    @property
+    def n_stages(self) -> int:
+        return len(self._engine.workers)
+
+    @property
+    def finished(self) -> List[GenRequest]:
+        return self._engine.finished
+
+    @property
+    def last_migration_bytes(self) -> Optional[int]:
+        return self._engine.last_migration_bytes
+
+    def active(self) -> List[GenRequest]:
+        return self._engine.active()
+
+    def submit(self, prompt: Sequence[int],
+               params: Union[SamplingParams, int, None] = None, *,
+               max_new: Optional[int] = None,
+               prefix_embeds=None) -> GenRequest:
+        return self._engine.submit(prompt, params, max_new=max_new,
+                                   prefix_embeds=prefix_embeds)
+
+    def step(self) -> StepOutput:
+        return self._engine.step()
+
+    def run(self, max_steps: int = 10_000) -> List[StepOutput]:
+        return self._engine.run(max_steps)
+
+    def generate(self, prompt: Sequence[int],
+                 params: Union[SamplingParams, int, None] = None, *,
+                 prefix_embeds=None,
+                 max_steps: int = 10_000) -> Iterator[TokenEvent]:
+        return self._engine.generate(prompt, params,
+                                     prefix_embeds=prefix_embeds,
+                                     max_steps=max_steps)
+
+    # ------------------------------------------------- elastic membership
+    def consolidate(self, full_params: dict) -> "ServingEndpoint":
+        """§6.2 scale-down behind the handle: gather KV/state onto one
+        standalone worker, swap it in, retire the pipeline-group engine.
+        In-flight requests (and ``last_migration_bytes``) carry over."""
+        src = self._engine
+        self._engine = src.consolidated(full_params)
+        src.retire()
+        return self
+
+    def scale_up(self, full_params: dict) -> List["ServingEndpoint"]:
+        """§6.2 scale-up: each stage becomes a standalone replica. This
+        handle keeps the consolidated engine (in-flight requests continue);
+        the fresh replicas come back as new endpoints. Returns all
+        endpoints, this one first."""
+        src = self._engine
+        engines = src.scale_up(full_params)
+        src.retire()
+        self._engine = engines[0]
+        return [self] + [ServingEndpoint(e) for e in engines[1:]]
+
+
+@dataclass
+class _Deployment:
+    cfg: ModelConfig
+    model: object                         # repro.models.Model
+    params: dict
+
+
+class ServerlessFrontend:
+    """Control-plane glue: model registry + Alg. 1 planning + stage-param
+    slicing, producing ``ServingEndpoint``s. One frontend per cluster."""
+
+    def __init__(self, servers: Dict[str, ServerSpec],
+                 controller: Optional[CentralController] = None,
+                 **controller_kw):
+        self.controller = controller or CentralController(servers,
+                                                          **controller_kw)
+        self._deployed: Dict[str, _Deployment] = {}
+
+    def deploy(self, cfg: ModelConfig, params: dict,
+               profile: ModelProfile) -> None:
+        """'Upload' a model: register its profile with the controller and
+        keep the weights ready for stage slicing on cold start."""
+        self.controller.register_model(profile)
+        self._deployed[profile.name] = _Deployment(cfg, build_model(cfg),
+                                                   params)
+
+    def cold_start(self, name: str, *, now: float = 0.0,
+                   free_hbm: Optional[Dict[str, int]] = None,
+                   force_s: Optional[int] = None, min_stages: int = 1,
+                   max_batch: int = 4, max_seq: int = 128,
+                   paged: Optional[bool] = None) -> ServingEndpoint:
+        """Alg. 1 cold start: pick a pipeline scheme, slice each stage's
+        parameters, and return a live endpoint (its ``scheme`` attribute
+        records the plan)."""
+        dep = self._deployed[name]
+        scheme = self.controller.plan_cold_start(name, free_hbm, now,
+                                                 force_s=force_s)
+        n_stages = min(max(scheme.s, min_stages), dep.cfg.n_periods)
+        stage_params = [dep.model.slice_stage_params(dep.params, n_stages, i)
+                        for i in range(n_stages)]
+        eng = Engine(dep.cfg, stage_params, max_batch=max_batch,
+                     max_seq=max_seq, paged=paged)
+        return ServingEndpoint(eng, scheme=scheme)
+
+    def full_params(self, name: str) -> dict:
+        """The un-sliced weights — what consolidation's standalone worker
+        loads (in the paper: fetched from the warm pool / object store)."""
+        return self._deployed[name].params

@@ -1,9 +1,20 @@
 """Continuous-batching serving engine over a pipeline-parallel worker group.
 
 Functional twin of the DES: real JAX compute (CPU-scale models), real KV
-caches, real consolidation — `consolidated()` performs the §6.2 KV gather
-and returns a standalone engine that must continue every in-flight request
-bit-exactly (tested in tests/test_engine.py).
+caches, real consolidation. The engine is organised around *request
+lifecycles* (see serving/api.py): ``submit(prompt, SamplingParams)``
+returns a request handle, every ``step()`` returns a ``StepOutput`` whose
+``TokenEvent``s let callers stream, requests finish with a
+``FinishReason`` (length / eos / stop_token) and carry ``RequestMetrics``
+in scheduler steps.
+
+Most callers should not hold an Engine directly: ``ServingEndpoint``
+(serving/endpoint.py) is the stable handle that swaps engines in place
+across §6.2 consolidation / scale-up. ``consolidated()`` / ``scale_up()``
+remain on the engine for callers that need the raw object (bit-exactness
+tests), but the endpoint additionally *retires* the source engine so a
+stale reference raises instead of silently corrupting the block tables it
+no longer owns.
 
 KV layouts (``paged`` flag, default from ``ops.decode_mode()``):
   * contiguous — per-slot (B, Smax) caches, the seed behaviour.
@@ -17,9 +28,10 @@ KV layouts (``paged`` flag, default from ``ops.decode_mode()``):
 from __future__ import annotations
 
 import collections
+import dataclasses
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Iterator, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +40,9 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.kernels import ops
 from repro.models.model import Model
+from repro.serving.api import (FinishReason, RequestMetrics, RequestOutput,
+                               SamplingParams, StepOutput, TokenEvent,
+                               sample_token)
 from repro.serving.kvcache import BlockManager
 from repro.serving.migration import (gather_stage_caches,
                                      gather_stage_caches_with_bytes)
@@ -36,13 +51,22 @@ from repro.serving.worker import StageWorker
 
 @dataclass
 class GenRequest:
+    """Opaque per-request handle returned by ``submit`` — callers read
+    ``generated``/``done``/``finish_reason``/``metrics`` and call
+    ``output()``; everything else is engine-internal."""
     rid: int
     prompt: List[int]
-    max_new: int
+    params: SamplingParams
     prefix_embeds: Optional[np.ndarray] = None
     generated: List[int] = field(default_factory=list)
     slot: Optional[int] = None
     done: bool = False
+    finish_reason: Optional[FinishReason] = None
+    metrics: RequestMetrics = field(default_factory=RequestMetrics)
+
+    @property
+    def max_new(self) -> int:
+        return self.params.max_new
 
     @property
     def prompt_total(self) -> int:
@@ -54,6 +78,11 @@ class GenRequest:
     def pos_next(self) -> int:
         """Cache position of the next token to feed."""
         return self.prompt_total + len(self.generated) - 1
+
+    def output(self) -> RequestOutput:
+        return RequestOutput(self.rid, tuple(self.prompt),
+                             tuple(self.generated), self.finish_reason,
+                             dataclasses.replace(self.metrics))
 
 
 class Engine:
@@ -87,18 +116,38 @@ class Engine:
         self._rid = itertools.count()
         self.finished: List[GenRequest] = []
         self.steps = 0
+        self.retired = False
         self.last_migration_bytes: Optional[int] = None
 
+    def _check_live(self):
+        if self.retired:
+            raise RuntimeError(
+                "Engine has been retired: its ServingEndpoint swapped in a "
+                "consolidated successor that owns the block tables — use "
+                "the endpoint handle, not the stale engine")
+
     # ------------------------------------------------------------- submit
-    def submit(self, prompt: Sequence[int], max_new: int,
+    def submit(self, prompt: Sequence[int],
+               params: Union[SamplingParams, int, None] = None, *,
+               max_new: Optional[int] = None,
                prefix_embeds=None) -> GenRequest:
-        req = GenRequest(next(self._rid), list(prompt), max_new,
+        self._check_live()
+        if isinstance(params, int):       # legacy submit(prompt, max_new)
+            params = SamplingParams(max_new=params)
+        if max_new is not None:           # legacy submit(..., max_new=n)
+            if params is not None:
+                raise TypeError("pass either SamplingParams or max_new")
+            params = SamplingParams(max_new=max_new)
+        if params is None:
+            params = SamplingParams()
+        req = GenRequest(next(self._rid), list(prompt), params,
                          prefix_embeds)
-        if req.prompt_total + max_new > self.max_seq:
+        req.metrics.submit_step = self.steps
+        if req.prompt_total + params.max_new > self.max_seq:
             raise ValueError(
-                f"request needs {req.prompt_total + max_new} cache slots "
-                f"(prompt {req.prompt_total} + max_new {max_new}) "
-                f"> max_seq={self.max_seq}")
+                f"request needs {req.prompt_total + params.max_new} cache "
+                f"slots (prompt {req.prompt_total} + max_new "
+                f"{params.max_new}) > max_seq={self.max_seq}")
         self.queue.append(req)
         return req
 
@@ -124,16 +173,21 @@ class Engine:
         need = self._blocks_for(req.prompt_total + req.max_new)
         return self.block_mgr.free_blocks - reserved >= need
 
-    def _admit(self):
-        for slot in self._free_slots():
-            if not self.queue:
+    def _admit(self, events: List[TokenEvent]):
+        """Admit from the queue head while slots and blocks allow. A
+        request whose prefill token already satisfies its finish condition
+        (max_new=1, eos, stop token) finishes here and frees its slot
+        immediately — it never occupies a decode step."""
+        while self.queue:
+            free = self._free_slots()
+            if not free:
                 break
             if not self._can_admit(self.queue[0]):
                 break                     # defer until blocks free up
             req = self.queue.popleft()
-            req.slot = slot
-            self.slots[slot] = req
-            self._prefill(req)
+            req.slot = free[0]
+            self.slots[req.slot] = req
+            self._prefill(req, events)
 
     def _block_tables(self) -> jnp.ndarray:
         """(B, nb) int32 page ids from the BlockManager; idle slots (and
@@ -145,7 +199,7 @@ class Engine:
             bt[r.slot, :len(blocks)] = blocks
         return jnp.asarray(bt)
 
-    def _prefill(self, req: GenRequest):
+    def _prefill(self, req: GenRequest, events: List[TokenEvent]):
         tokens = jnp.asarray([req.prompt], jnp.int32)
         prefix = None
         if req.prefix_embeds is not None:
@@ -160,53 +214,116 @@ class Engine:
         for w in self.workers:
             h = w.prefill_slot(h, req.slot, positions, prefix_embeds=prefix,
                                block_tables=bt)
-        first = int(jnp.argmax(h[0, 0]))
-        req.generated.append(first)
+        req.metrics.admit_step = self.steps
+        first = sample_token(h[0, 0], req.params, 0)
+        reason = self._emit(req, first, events)
         self.block_mgr.extend(req.rid)
+        if reason is not None:
+            self._finish(req, reason)
 
     # -------------------------------------------------------------- step
     def active(self) -> List[GenRequest]:
         return [r for r in self.slots if r is not None]
 
-    def step(self):
-        """One scheduler iteration: admit then one decode for all slots."""
-        self._admit()
-        reqs = self.active()
-        if not reqs:
-            return
-        tokens = np.zeros((self.max_batch, 1), np.int32)
-        positions = np.zeros((self.max_batch, 1), np.int32)
-        for r in reqs:
-            tokens[r.slot, 0] = r.generated[-1]
-            positions[r.slot, 0] = r.pos_next
-        h = jnp.asarray(tokens)
-        pos = jnp.asarray(positions)
-        bt = self._block_tables() if self.paged else None
-        for w in self.workers:
-            h = w.decode(h, pos, block_tables=bt)
-        nxt = np.asarray(jnp.argmax(h[:, 0], axis=-1))
-        self.steps += 1
-        for r in list(reqs):
-            if len(r.generated) >= r.max_new:
-                self._finish(r)
-                continue
-            r.generated.append(int(nxt[r.slot]))
-            self.block_mgr.extend(r.rid)
-            if len(r.generated) >= r.max_new:
-                self._finish(r)
+    def _finish_reason(self, req: GenRequest,
+                       token: int) -> Optional[FinishReason]:
+        sp = req.params
+        if sp.eos_token is not None and token == sp.eos_token:
+            return FinishReason.EOS
+        if token in sp.stop_tokens:
+            return FinishReason.STOP_TOKEN
+        if len(req.generated) >= sp.max_new:
+            return FinishReason.LENGTH
+        return None
 
-    def _finish(self, req: GenRequest):
+    def _emit(self, req: GenRequest, token: int,
+              events: List[TokenEvent]) -> Optional[FinishReason]:
+        req.generated.append(token)
+        req.metrics.n_tokens = len(req.generated)
+        reason = self._finish_reason(req, token)
+        events.append(TokenEvent(req.rid, token, reason))
+        return reason
+
+    def step(self) -> StepOutput:
+        """One scheduler iteration: admit then one decode for all slots.
+        Returns the step's newly emitted token events (streaming)."""
+        self._check_live()
+        self.steps += 1
+        events: List[TokenEvent] = []
+        n_done = len(self.finished)
+        self._admit(events)
+        reqs = self.active()
+        if reqs:
+            tokens = np.zeros((self.max_batch, 1), np.int32)
+            positions = np.zeros((self.max_batch, 1), np.int32)
+            for r in reqs:
+                tokens[r.slot, 0] = r.generated[-1]
+                positions[r.slot, 0] = r.pos_next
+            h = jnp.asarray(tokens)
+            pos = jnp.asarray(positions)
+            bt = self._block_tables() if self.paged else None
+            for w in self.workers:
+                h = w.decode(h, pos, block_tables=bt)
+            greedy = None
+            if any(r.params.greedy for r in reqs):
+                greedy = np.asarray(jnp.argmax(h[:, 0], axis=-1))
+            for r in list(reqs):
+                if r.params.greedy:
+                    nxt = int(greedy[r.slot])
+                else:
+                    nxt = sample_token(h[r.slot, 0], r.params,
+                                       len(r.generated))
+                r.metrics.decode_steps += 1
+                reason = self._emit(r, nxt, events)
+                self.block_mgr.extend(r.rid)
+                if reason is not None:
+                    self._finish(r, reason)
+        return StepOutput(self.steps, tuple(events),
+                          tuple(r.rid for r in self.finished[n_done:]),
+                          len(self.active()), len(self.queue))
+
+    def _finish(self, req: GenRequest, reason: FinishReason):
         req.done = True
+        req.finish_reason = reason
+        req.metrics.finish_step = self.steps
         self.slots[req.slot] = None
         self.block_mgr.free(req.rid)
         for w in self.workers:
             w.clear_slot(req.slot)
         self.finished.append(req)
 
-    def run(self, max_steps: int = 10_000):
+    def run(self, max_steps: int = 10_000) -> List[StepOutput]:
+        self._check_live()
+        outs = []
         while (self.queue or self.active()) and max_steps:
-            self.step()
+            outs.append(self.step())
             max_steps -= 1
+        return outs
+
+    def generate(self, prompt: Sequence[int],
+                 params: Union[SamplingParams, int, None] = None, *,
+                 prefix_embeds=None,
+                 max_steps: int = 10_000) -> Iterator[TokenEvent]:
+        """Submit one request (eagerly, before the first ``next()``) and
+        drive the engine until it finishes, yielding its TokenEvents as
+        they are emitted. Other in-flight requests advance normally but
+        their events are not yielded — for multiplexed streaming, drive
+        ``step()`` yourself and demux ``StepOutput.events`` by rid."""
+        req = self.submit(prompt, params, prefix_embeds=prefix_embeds)
+
+        def _drive() -> Iterator[TokenEvent]:
+            for _ in range(max_steps):
+                if req.done:
+                    return
+                out = self.step()
+                for ev in out.events:
+                    if ev.rid == req.rid:
+                        yield ev
+            if not req.done:
+                raise RuntimeError(f"request {req.rid} not finished after "
+                                   f"{max_steps} steps (admission starved?)")
+
+        return _drive()
 
     # ---------------------------------------------------- consolidation
     def n_attn_layers(self, migrated_only: bool = False) -> int:
@@ -225,6 +342,7 @@ class Engine:
         paged mode the gather is block-granular (§6.2: only the blocks the
         BlockManager reports live move) and ``last_migration_bytes`` is the
         exact byte count gathered."""
+        self._check_live()
         eng = Engine(self.cfg, [full_params], self.max_batch, self.max_seq,
                      self.block_mgr.block_size, paged=self.paged)
         stage_caches = [w.cache for w in self.workers]
@@ -242,6 +360,7 @@ class Engine:
         eng.block_mgr = self.block_mgr
         eng._rid = self._rid
         eng.finished = self.finished
+        eng.steps = self.steps            # keep step metrics continuous
         return eng
 
     def scale_up(self, full_params: dict) -> List["Engine"]:
@@ -254,3 +373,16 @@ class Engine:
                                  self.max_seq, self.block_mgr.block_size,
                                  paged=self.paged))
         return [first] + others
+
+    def retire(self):
+        """Mark this engine unusable after a ServingEndpoint swapped in
+        its consolidated successor. The successor aliases this engine's
+        block manager, queue, and slots — clear our references and drop
+        worker caches so any stale use raises (``_check_live``) instead of
+        silently corrupting block tables it no longer owns."""
+        self.retired = True
+        self.slots = [None] * self.max_batch
+        self.queue = collections.deque()
+        for w in self.workers:
+            w.retire()
+        self.workers = []

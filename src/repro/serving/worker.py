@@ -134,6 +134,12 @@ class StageWorker:
                                           self.cache, block_tables)
         return out
 
+    def retire(self):
+        """Drop the cache and params so a retired engine's stale worker
+        fails fast instead of writing into pools it no longer owns."""
+        self.cache = None
+        self.params = None
+
     def clear_slot(self, slot: int):
         """Zero a slot's recurrent state (attn KV needs no clear: contiguous
         caches are masked by kv_len; paged pools are unreachable once the

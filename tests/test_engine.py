@@ -1,22 +1,29 @@
 """Serving engine integration: continuous batching, pipeline-parallel
 execution, scale-down/up consolidation — all must match the single-worker
-reference bit-exactly (greedy decoding)."""
+reference bit-exactly (greedy decoding). Serving goes through the stable
+ServingEndpoint handle; consolidation happens in place behind it."""
 
 import jax
 import pytest
 
 from conftest import smoke
 from repro.models import build_model
+from repro.serving.api import SamplingParams
+from repro.serving.endpoint import ServingEndpoint
 from repro.serving.engine import Engine
 from repro.serving.kvcache import BlockManager
 
 PROMPTS = [[5, 7, 9, 11], [3, 1, 4, 1, 5, 9, 2], [42] * 6, [8, 6, 7]]
 
 
+def _endpoint(cfg, stage_params, **kw):
+    return ServingEndpoint(Engine(cfg, stage_params, **kw))
+
+
 def _reference(cfg, params, prompts, max_new=10):
-    eng = Engine(cfg, [params], max_batch=3, max_seq=64)
-    reqs = [eng.submit(p, max_new) for p in prompts]
-    eng.run()
+    ep = _endpoint(cfg, [params], max_batch=3, max_seq=64)
+    reqs = [ep.submit(p, SamplingParams(max_new=max_new)) for p in prompts]
+    ep.run()
     return [r.generated for r in reqs]
 
 
@@ -29,12 +36,13 @@ def granite():
 
 def test_continuous_batching_queueing(granite):
     cfg, params = granite
-    eng = Engine(cfg, [params], max_batch=2, max_seq=64)  # queue forms
-    reqs = [eng.submit(p, 6) for p in PROMPTS]
-    eng.run()
+    ep = _endpoint(cfg, [params], max_batch=2, max_seq=64)  # queue forms
+    reqs = [ep.submit(p, SamplingParams(max_new=6)) for p in PROMPTS]
+    ep.run()
     assert all(r.done for r in reqs)
     assert all(len(r.generated) == 6 for r in reqs)
-    assert eng.block_mgr.free_blocks == eng.block_mgr.n_blocks
+    bm = ep.engine.block_mgr
+    assert bm.free_blocks == bm.n_blocks
 
 
 @pytest.mark.parametrize("n_stages", [2, 4])
@@ -45,9 +53,9 @@ def test_pipeline_matches_reference(granite, n_stages):
     m = build_model(cfg)
     ref = _reference(cfg, params, PROMPTS)
     sp = [m.slice_stage_params(params, n_stages, i) for i in range(n_stages)]
-    eng = Engine(cfg, sp, max_batch=3, max_seq=64)
-    reqs = [eng.submit(p, 10) for p in PROMPTS]
-    eng.run()
+    ep = _endpoint(cfg, sp, max_batch=3, max_seq=64)
+    reqs = [ep.submit(p, SamplingParams(max_new=10)) for p in PROMPTS]
+    ep.run()
     assert [r.generated for r in reqs] == ref
 
 
@@ -59,12 +67,12 @@ def test_consolidation_mid_stream(arch, rng):
     params = m.init(rng)
     ref = _reference(cfg, params, PROMPTS[:2], max_new=8)
     sp = [m.slice_stage_params(params, 2, i) for i in range(2)]
-    eng = Engine(cfg, sp, max_batch=2, max_seq=48)
-    reqs = [eng.submit(p, 8) for p in PROMPTS[:2]]
+    ep = _endpoint(cfg, sp, max_batch=2, max_seq=48)
+    reqs = [ep.submit(p, SamplingParams(max_new=8)) for p in PROMPTS[:2]]
     for _ in range(3):
-        eng.step()
-    eng = eng.consolidated(params)
-    eng.run()
+        ep.step()
+    ep.consolidate(params)               # in place: same handle keeps going
+    ep.run()
     assert [r.generated for r in reqs] == ref
 
 
@@ -72,17 +80,18 @@ def test_scale_up_yields_standalone_replicas(granite):
     cfg, params = granite
     m = build_model(cfg)
     sp = [m.slice_stage_params(params, 2, i) for i in range(2)]
-    eng = Engine(cfg, sp, max_batch=2, max_seq=64)
-    r0 = eng.submit(PROMPTS[0], 6)
+    ep = _endpoint(cfg, sp, max_batch=2, max_seq=64)
+    r0 = ep.submit(PROMPTS[0], SamplingParams(max_new=6))
     for _ in range(2):
-        eng.step()
-    engines = eng.scale_up(params)
-    assert len(engines) == 2
-    engines[0].run()
+        ep.step()
+    endpoints = ep.scale_up(params)
+    assert len(endpoints) == 2
+    assert endpoints[0] is ep            # the handle survives the swap
+    ep.run()
     assert r0.done
     # the new replica serves fresh requests with identical outputs
-    r1 = engines[1].submit(PROMPTS[0], 6)
-    engines[1].run()
+    r1 = endpoints[1].submit(PROMPTS[0], SamplingParams(max_new=6))
+    endpoints[1].run()
     ref = _reference(cfg, params, [PROMPTS[0]], max_new=6)[0]
     assert r1.generated == ref
 
@@ -92,12 +101,26 @@ def test_vlm_prefix_serving(rng):
     cfg = smoke("llava-next-34b")
     m = build_model(cfg)
     params = m.init(rng)
-    eng = Engine(cfg, [params], max_batch=2, max_seq=64)
+    ep = _endpoint(cfg, [params], max_batch=2, max_seq=64)
     prefix = np.random.default_rng(0).standard_normal(
         (cfg.n_image_tokens, cfg.d_model)).astype(np.float32) * 0.02
-    r = eng.submit([3, 5, 7], 5, prefix_embeds=prefix)
-    eng.run()
+    r = ep.submit([3, 5, 7], SamplingParams(max_new=5), prefix_embeds=prefix)
+    ep.run()
     assert r.done and len(r.generated) == 5
+
+
+def test_legacy_submit_path_matches_sampling_params(granite):
+    """Thin deprecation path: submit(prompt, int) and submit(max_new=n)
+    still work on the raw engine and match SamplingParams exactly."""
+    cfg, params = granite
+    eng = Engine(cfg, [params], max_batch=3, max_seq=64)
+    a = eng.submit(PROMPTS[0], 6)                  # legacy positional int
+    b = eng.submit(PROMPTS[0], max_new=6)          # legacy kwarg
+    c = eng.submit(PROMPTS[0], SamplingParams(max_new=6))
+    eng.run()
+    assert a.generated == b.generated == c.generated
+    with pytest.raises(TypeError):
+        eng.submit(PROMPTS[0], SamplingParams(max_new=6), max_new=6)
 
 
 def test_block_manager_accounting():

@@ -20,6 +20,8 @@ from conftest import smoke
 from repro.kernels import ops, ref
 from repro.kernels.decode_attention import paged_decode_attention
 from repro.models import build_model
+from repro.serving.api import SamplingParams
+from repro.serving.endpoint import ServingEndpoint
 from repro.serving.engine import Engine
 
 PROMPTS = [[5, 7, 9, 11], [3, 1, 4, 1, 5, 9, 2], [42] * 6, [8, 6, 7]]
@@ -101,12 +103,14 @@ def test_engine_paged_matches_contiguous(granite):
     cfg, params = granite
     outs = {}
     for paged in (False, True):
-        eng = Engine(cfg, [params], max_batch=3, max_seq=64, paged=paged)
-        reqs = [eng.submit(p, 8) for p in PROMPTS]
-        eng.run()
+        ep = ServingEndpoint(Engine(cfg, [params], max_batch=3, max_seq=64,
+                                    paged=paged))
+        reqs = [ep.submit(p, SamplingParams(max_new=8)) for p in PROMPTS]
+        ep.run()
         assert all(r.done for r in reqs)
         outs[paged] = [r.generated for r in reqs]
-        assert eng.block_mgr.free_blocks == eng.block_mgr.n_blocks
+        bm = ep.engine.block_mgr
+        assert bm.free_blocks == bm.n_blocks
     assert outs[True] == outs[False]
 
 
@@ -118,24 +122,27 @@ def test_paged_consolidation_block_exact(arch, rng):
     m = build_model(cfg)
     params = m.init(rng)
 
-    ref_eng = Engine(cfg, [params], max_batch=2, max_seq=48, paged=True)
-    ref_reqs = [ref_eng.submit(p, 8) for p in PROMPTS[:2]]
-    ref_eng.run()
+    ref_ep = ServingEndpoint(Engine(cfg, [params], max_batch=2, max_seq=48,
+                                    paged=True))
+    ref_reqs = [ref_ep.submit(p, SamplingParams(max_new=8))
+                for p in PROMPTS[:2]]
+    ref_ep.run()
 
     sp = [m.slice_stage_params(params, 2, i) for i in range(2)]
-    eng = Engine(cfg, sp, max_batch=2, max_seq=48, paged=True)
-    reqs = [eng.submit(p, 8) for p in PROMPTS[:2]]
+    ep = ServingEndpoint(Engine(cfg, sp, max_batch=2, max_seq=48,
+                                paged=True))
+    reqs = [ep.submit(p, SamplingParams(max_new=8)) for p in PROMPTS[:2]]
     for _ in range(3):
-        eng.step()
-    live_rids = [r.rid for r in eng.active()]
-    n_remote = eng.n_attn_layers(migrated_only=True)
-    quoted = eng.block_mgr.migration_bytes(live_rids, n_remote)
-    eng = eng.consolidated(params)
-    assert eng.last_migration_bytes == quoted
+        ep.step()
+    live_rids = [r.rid for r in ep.active()]
+    n_remote = ep.engine.n_attn_layers(migrated_only=True)
+    quoted = ep.engine.block_mgr.migration_bytes(live_rids, n_remote)
+    ep.consolidate(params)
+    assert ep.last_migration_bytes == quoted
     # only a degenerate split (all periods on the surviving stage, e.g.
     # jamba-smoke's single period) legitimately ships zero KV bytes
     assert (quoted > 0) == (n_remote > 0)
-    eng.run()
+    ep.run()
     assert [r.generated for r in reqs] == [r.generated for r in ref_reqs]
 
 
@@ -147,7 +154,7 @@ def test_admission_defers_instead_of_raising(granite):
     bs = eng.block_mgr.block_size
     # a co-tenant hogs the whole pool
     eng.block_mgr.allocate(-1, eng.block_mgr.n_blocks * bs)
-    r = eng.submit(PROMPTS[0], 4)
+    r = eng.submit(PROMPTS[0], SamplingParams(max_new=4))
     eng.step()
     assert r.slot is None and not r.done and len(eng.queue) == 1
     eng.block_mgr.free(-1)
@@ -161,9 +168,9 @@ def test_submit_rejects_requests_larger_than_max_seq(granite):
     cfg, params = granite
     eng = Engine(cfg, [params], max_batch=2, max_seq=64, paged=True)
     with pytest.raises(ValueError, match="max_seq"):
-        eng.submit([1] * 60, max_new=60)
+        eng.submit([1] * 60, SamplingParams(max_new=60))
     # boundary case fits exactly
-    r = eng.submit([1] * 60, max_new=4)
+    r = eng.submit([1] * 60, SamplingParams(max_new=4))
     eng.run()
     assert r.done and len(r.generated) == 4
 

@@ -1,0 +1,235 @@
+"""Request-lifecycle serving API: seeded sampling determinism, finish
+reasons, streaming event order, per-request step metrics, prefill-time
+finishing, endpoint lifecycle (in-place consolidation, source-engine
+retirement), and the serverless frontend glue."""
+
+import jax
+import pytest
+
+from conftest import smoke
+from repro.core import GB, Gbps, ModelProfile, ServerSpec, SLO, TimingProfile
+from repro.models import build_model
+from repro.serving.api import FinishReason, SamplingParams
+from repro.serving.endpoint import ServerlessFrontend, ServingEndpoint
+from repro.serving.engine import Engine
+
+PROMPT = [5, 7, 9, 11]
+SAMPLED = SamplingParams(max_new=10, temperature=0.8, top_k=8, seed=7)
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = smoke("granite-3-8b")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _run_one(cfg, params, sp, prompt=PROMPT, **eng_kw):
+    eng_kw.setdefault("max_batch", 2)
+    eng_kw.setdefault("max_seq", 64)
+    ep = ServingEndpoint(Engine(cfg, [params], **eng_kw))
+    r = ep.submit(prompt, sp)
+    ep.run()
+    return r
+
+
+def _greedy_tokens(cfg, params, max_new=10):
+    return _run_one(cfg, params, SamplingParams(max_new=max_new)).generated
+
+
+# ------------------------------------------------------------- sampling
+def test_seeded_sampling_deterministic_across_layouts(granite):
+    """Same (seed, prompt) -> same stream, regardless of KV layout; the
+    PRNG key depends only on (seed, token index)."""
+    cfg, params = granite
+    streams = {}
+    for paged in (False, True):
+        streams[paged] = _run_one(cfg, params, SAMPLED, paged=paged).generated
+    assert streams[False] == streams[True]
+    assert len(streams[False]) == SAMPLED.max_new
+    # re-running the same engine config reproduces the stream exactly
+    assert _run_one(cfg, params, SAMPLED).generated == streams[False]
+    # a different seed diverges (512-token vocab, 10 draws)
+    other = _run_one(cfg, params,
+                     SamplingParams(max_new=10, temperature=0.8, top_k=8,
+                                    seed=8)).generated
+    assert other != streams[False]
+    # greedy is unaffected by seed: temperature 0 ignores the PRNG
+    g1 = _run_one(cfg, params, SamplingParams(max_new=10, seed=1)).generated
+    g2 = _run_one(cfg, params, SamplingParams(max_new=10, seed=2)).generated
+    assert g1 == g2 == _greedy_tokens(cfg, params)
+
+
+def test_sampled_stream_survives_consolidation(granite):
+    """Sampling keys don't depend on engine identity — a §6.2 scale-down
+    mid-stream continues the sampled stream bit-exactly."""
+    cfg, params = granite
+    want = _run_one(cfg, params, SAMPLED).generated
+    m = build_model(cfg)
+    sp = [m.slice_stage_params(params, 2, i) for i in range(2)]
+    ep = ServingEndpoint(Engine(cfg, sp, max_batch=2, max_seq=64))
+    r = ep.submit(PROMPT, SAMPLED)
+    for _ in range(3):
+        ep.step()
+    ep.consolidate(params)
+    ep.run()
+    assert r.generated == want
+
+
+# -------------------------------------------------------- finish reasons
+def test_eos_and_stop_token_finish_reasons(granite):
+    cfg, params = granite
+    greedy = _greedy_tokens(cfg, params)
+    eos = _run_one(cfg, params,
+                   SamplingParams(max_new=10, eos_token=greedy[2]))
+    assert eos.generated == greedy[:3]           # eos token is included
+    assert eos.finish_reason is FinishReason.EOS
+    stop = _run_one(cfg, params,
+                    SamplingParams(max_new=10, stop_tokens=(greedy[4],)))
+    assert stop.generated == greedy[:5]
+    assert stop.finish_reason is FinishReason.STOP_TOKEN
+    length = _run_one(cfg, params, SamplingParams(max_new=10))
+    assert length.finish_reason is FinishReason.LENGTH
+    out = length.output()
+    assert out.done and out.token_ids == tuple(greedy)
+    assert out.finish_reason is FinishReason.LENGTH
+
+
+def test_finish_at_prefill_frees_slot_immediately(granite):
+    """Regression (satellite): max_new=1 (or eos on the prefill token)
+    finishes during admission — no wasted decode step, and the freed slot
+    is reusable within the same scheduler step."""
+    cfg, params = granite
+    eng = Engine(cfg, [params], max_batch=1, max_seq=64)
+    a = eng.submit([1, 2, 3], SamplingParams(max_new=1))
+    b = eng.submit([4, 5, 6], SamplingParams(max_new=1))
+    out = eng.step()
+    # both admitted, prefilled, finished in ONE step through one slot
+    assert eng.steps == 1 and a.done and b.done
+    assert a.metrics.decode_steps == b.metrics.decode_steps == 0
+    assert a.finish_reason is FinishReason.LENGTH
+    assert [ev.rid for ev in out.events] == [a.rid, b.rid]
+    assert out.finished == (a.rid, b.rid)
+    assert eng.block_mgr.free_blocks == eng.block_mgr.n_blocks
+    # eos on the prefill token finishes at prefill too
+    first = _greedy_tokens(cfg, params)[0]
+    c = eng.submit(PROMPT, SamplingParams(max_new=5, eos_token=first))
+    eng.step()
+    assert c.done and c.finish_reason is FinishReason.EOS
+    assert c.metrics.decode_steps == 0
+
+
+# ------------------------------------------------------------- streaming
+def test_streaming_event_order_and_coverage(granite):
+    """Per step: prefill events (admission order) then decode events
+    (slot order); concatenated per-rid events equal the final streams."""
+    cfg, params = granite
+    ep = ServingEndpoint(Engine(cfg, [params], max_batch=2, max_seq=64))
+    r0 = ep.submit(PROMPT, SamplingParams(max_new=4))
+    r1 = ep.submit([3, 1, 4, 1, 5], SamplingParams(max_new=6))
+    first = ep.step()
+    # step 1: both prefills, then both decodes, in rid==slot order
+    assert [ev.rid for ev in first.events] == [r0.rid, r1.rid,
+                                               r0.rid, r1.rid]
+    outs = [first] + ep.run()
+    streams = {r0.rid: [], r1.rid: []}
+    for out in outs:
+        assert out.step >= 1
+        for ev in out.events:
+            streams[ev.rid].append(ev.token)
+            if ev.finish_reason is not None:
+                assert ev.rid in out.finished
+    assert streams[r0.rid] == r0.generated
+    assert streams[r1.rid] == r1.generated
+
+
+def test_generate_yields_matching_stream(granite):
+    cfg, params = granite
+    want = _greedy_tokens(cfg, params, max_new=6)
+    ep = ServingEndpoint(Engine(cfg, [params], max_batch=2, max_seq=64))
+    events = list(ep.generate(PROMPT, SamplingParams(max_new=6)))
+    assert [ev.token for ev in events] == want
+    assert events[-1].finish_reason is FinishReason.LENGTH
+    assert all(ev.finish_reason is None for ev in events[:-1])
+
+
+# --------------------------------------------------------------- metrics
+def test_metrics_immediate_admission(granite):
+    cfg, params = granite
+    r = _run_one(cfg, params, SamplingParams(max_new=8))
+    m = r.metrics
+    assert m.ttft_steps == 1 and m.queue_steps == 0
+    assert m.decode_steps == 7            # prefill token + 7 decode tokens
+    assert m.n_tokens == 8
+    assert m.tpot_steps == 1.0            # decoded every resident step
+    # step 1 emits two tokens (prefill + same-step decode), steps 2..7 one
+    assert m.finish_step == m.admit_step + 6
+
+
+def test_metrics_deferred_admission_counts_queue_steps(granite):
+    cfg, params = granite
+    eng = Engine(cfg, [params], max_batch=2, max_seq=64, paged=True)
+    bs = eng.block_mgr.block_size
+    eng.block_mgr.allocate(-1, eng.block_mgr.n_blocks * bs)  # pool hogged
+    r = eng.submit(PROMPT, SamplingParams(max_new=4))
+    for _ in range(3):
+        eng.step()                        # admission starved
+    assert r.metrics.admit_step is None and r.metrics.ttft_steps is None
+    eng.block_mgr.free(-1)
+    eng.run()
+    assert r.done
+    assert r.metrics.queue_steps == 3
+    assert r.metrics.ttft_steps == 4
+
+
+# ------------------------------------------------------------- lifecycle
+def test_retired_source_engine_raises(granite):
+    """Satellite: after the endpoint swaps engines, the old engine must
+    raise instead of silently driving block tables it no longer owns."""
+    cfg, params = granite
+    m = build_model(cfg)
+    sp = [m.slice_stage_params(params, 2, i) for i in range(2)]
+    ep = ServingEndpoint(Engine(cfg, sp, max_batch=2, max_seq=64))
+    r = ep.submit(PROMPT, SamplingParams(max_new=6))
+    ep.step()
+    stale = ep.engine
+    ep.consolidate(params)
+    assert ep.engine is not stale
+    for call in (lambda: stale.submit(PROMPT, SamplingParams(max_new=2)),
+                 stale.step, stale.run,
+                 lambda: stale.consolidated(params),
+                 lambda: stale.scale_up(params)):
+        with pytest.raises(RuntimeError, match="retired"):
+            call()
+    assert stale.active() == [] and not stale.workers
+    ep.run()                              # the live handle still serves
+    assert r.done
+
+
+def test_frontend_cold_start_to_endpoint(granite):
+    """ServerlessFrontend: Alg.1 plan -> stage slicing -> live endpoint;
+    output matches the single-worker reference across consolidation."""
+    cfg, params = granite
+    servers = {f"srv{i}": ServerSpec(f"srv{i}", 16 * Gbps, 12e9, 24 * GB)
+               for i in range(4)}
+    front = ServerlessFrontend(servers)
+    front.deploy(cfg, params, ModelProfile(
+        cfg.name, int(12.5 * GB), TimingProfile(), SLO(ttft=7.5, tpot=0.2)))
+    ep = front.cold_start(cfg.name, min_stages=2, max_batch=2, max_seq=64)
+    assert ep.scheme is not None and ep.n_stages >= 2
+    r = ep.submit(PROMPT, SamplingParams(max_new=8))
+    for _ in range(2):
+        ep.step()
+    ep.consolidate(front.full_params(cfg.name))
+    assert ep.n_stages == 1
+    ep.run()
+    assert r.generated == _greedy_tokens(cfg, params, max_new=8)
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError):
+        SamplingParams(max_new=0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-1)
+    assert SamplingParams().greedy
+    assert not SamplingParams(temperature=0.5).greedy

@@ -8,6 +8,8 @@ import pytest
 from conftest import smoke
 from repro.core.types import GB, Gbps, ModelProfile, ServerSpec, SLO
 from repro.models import build_model
+from repro.serving.api import SamplingParams
+from repro.serving.endpoint import ServingEndpoint
 from repro.serving.engine import Engine
 from repro.serving.simulation import ServerlessSim
 from repro.workloads.applications import APPLICATIONS, WARM, timings_for
@@ -83,14 +85,14 @@ def test_engine_cold_to_warm_path(rng):
     m = build_model(cfg)
     params = m.init(rng)
     sp = [m.slice_stage_params(params, 2, i) for i in range(2)]
-    eng = Engine(cfg, sp, max_batch=2, max_seq=64)
-    r = eng.submit([9, 8, 7], 8)
+    ep = ServingEndpoint(Engine(cfg, sp, max_batch=2, max_seq=64))
+    r = ep.submit([9, 8, 7], SamplingParams(max_new=8))
     for _ in range(4):
-        eng.step()
-    eng = eng.consolidated(params)
-    r2 = eng.submit([9, 8, 7], 8)      # warm request on consolidated worker
-    eng.run()
-    ref = Engine(cfg, [params], max_batch=2, max_seq=64)
-    rr = ref.submit([9, 8, 7], 8)
+        ep.step()
+    ep.consolidate(params)
+    r2 = ep.submit([9, 8, 7], SamplingParams(max_new=8))  # warm request
+    ep.run()
+    ref = ServingEndpoint(Engine(cfg, [params], max_batch=2, max_seq=64))
+    rr = ref.submit([9, 8, 7], SamplingParams(max_new=8))
     ref.run()
     assert r.generated == rr.generated == r2.generated
