@@ -1,6 +1,9 @@
 """Engine micro-benchmark: prefill latency and decode throughput of the
-real JAX serving engine, contiguous vs paged KV layout, on the reduced
-CPU config. Writes ``BENCH_engine.json`` (path overridable via argv[1])
+real JAX serving engine on the reduced CPU config — contiguous vs paged
+KV layout, plus the paged engine's prefix cache (shared-prefix workload:
+prefill-FLOP and pool-occupancy win) and chunked prefill (mixed
+prefill+decode steps bounding per-step latency while a long prompt
+prefills). Writes ``BENCH_engine.json`` (path overridable via argv[1])
 so the perf trajectory is tracked across PRs.
 
     PYTHONPATH=src python benchmarks/bench_engine.py [out.json]
@@ -23,6 +26,11 @@ from repro.serving.engine import Engine
 BATCH = 4
 PROMPT_LEN = 16
 N_DECODE = 16
+BLOCK = 8
+SHARED_LEN = 32          # system-prompt prefix shared by every request
+TAIL_LEN = 8
+LONG_PROMPT = 64
+CHUNK = 8
 
 
 def bench_layout(cfg, params, paged: bool) -> dict:
@@ -53,15 +61,88 @@ def bench_layout(cfg, params, paged: bool) -> dict:
     }
 
 
+def bench_prefix_sharing(cfg, params, prefix_cache: bool) -> dict:
+    """BATCH requests sharing a SHARED_LEN-token system prompt. With the
+    prefix cache, every request after the first prefills only its tail:
+    the FLOP win is the cached-token count, the memory win the deduped
+    pool occupancy."""
+    eng = Engine(cfg, [params], max_batch=BATCH, max_seq=96,
+                 block_size=BLOCK, paged=True, prefix_cache=prefix_cache)
+    shared = list(range(2, 2 + SHARED_LEN))
+    reqs = [eng.submit(shared + [100 + i] * TAIL_LEN,
+                       SamplingParams(max_new=8)) for i in range(BATCH)]
+    t0 = time.perf_counter()
+    eng.step()                    # all BATCH prompts prefill here
+    prefill_step_s = time.perf_counter() - t0
+    bm = eng.block_mgr
+    blocks_in_use = bm.n_blocks - bm.free_blocks   # referenced right now
+    blocks_no_sharing = sum(len(bm.tables[r.rid].blocks) for r in reqs)
+    eng.run()
+    prompt_tokens = sum(r.prompt_total for r in reqs)
+    cached = sum(r.metrics.cached_tokens for r in reqs)
+    return {
+        "workload": "shared-prefix",
+        "prefix_cache": prefix_cache,
+        "batch": BATCH,
+        "shared_prefix_len": SHARED_LEN,
+        "prompt_tokens_total": prompt_tokens,
+        "cached_tokens_total": cached,
+        "prefill_tokens_computed": prompt_tokens - cached,
+        "pool_blocks_used": blocks_in_use,
+        "pool_blocks_without_sharing": blocks_no_sharing,
+        "prefill_step_s": prefill_step_s,
+        "cache_hit_tokens": bm.cache_hit_tokens,
+        "evictions": bm.evictions,
+    }
+
+
+def bench_chunked_prefill(cfg, params, chunk) -> dict:
+    """BATCH-1 short requests decode while one LONG_PROMPT request
+    arrives. Monolithic prefill stalls every decode for a full forward;
+    chunked prefill bounds the per-step work (mixed steps)."""
+    eng = Engine(cfg, [params], max_batch=BATCH, max_seq=96,
+                 block_size=BLOCK, paged=True, prefill_chunk=chunk)
+    shorts = [eng.submit([1 + i] * 4, SamplingParams(max_new=40))
+              for i in range(BATCH - 1)]
+    for _ in range(2):            # shorts are warm and decoding
+        eng.step()
+    long_req = eng.submit(list(range(3, 3 + LONG_PROMPT)),
+                          SamplingParams(max_new=4))
+    short_before = sum(len(r.generated) for r in shorts)
+    step_ms, mixed_steps = [], 0
+    while not long_req.prefill_done:
+        t0 = time.perf_counter()
+        out = eng.step()
+        step_ms.append((time.perf_counter() - t0) * 1e3)
+        if out.prefill_tokens and out.events:
+            mixed_steps += 1
+    short_during = sum(len(r.generated) for r in shorts) - short_before
+    eng.run()
+    return {
+        "workload": "chunked-prefill",
+        "prefill_chunk": chunk,
+        "long_prompt_len": LONG_PROMPT,
+        "decode_batch": BATCH - 1,
+        "prefill_steps": len(step_ms),
+        "mixed_steps": mixed_steps,
+        "max_step_ms_during_prefill": max(step_ms),
+        "mean_step_ms_during_prefill": sum(step_ms) / len(step_ms),
+        "long_ttft_steps": long_req.metrics.ttft_steps,
+        "short_tokens_during_prefill": short_during,
+    }
+
+
 def main(out_path: str = "BENCH_engine.json"):
     cfg = smoke_variant(get_config("granite-3-8b"))
     params = build_model(cfg).init(jax.random.PRNGKey(0))
     results = [bench_layout(cfg, params, paged) for paged in (False, True)]
+    prefix = [bench_prefix_sharing(cfg, params, pc) for pc in (False, True)]
+    chunked = [bench_chunked_prefill(cfg, params, c) for c in (None, CHUNK)]
     report = {
         "bench": "engine-smoke",
         "model": cfg.name,
         "device": jax.devices()[0].platform,
-        "results": results,
+        "results": results + prefix + chunked,
     }
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
@@ -71,6 +152,19 @@ def main(out_path: str = "BENCH_engine.json"):
               f"{r['first_step_cold_s']*1e3:.0f}ms"
               f"  decode {r['decode_steps_per_s']:.1f} steps/s"
               f" ({r['decode_step_ms']:.1f} ms/step, batch={r['batch']})")
+    for r in prefix:
+        on = "on " if r["prefix_cache"] else "off"
+        print(f"prefix {on}: prefill {r['prefill_tokens_computed']}/"
+              f"{r['prompt_tokens_total']} tokens computed, pool "
+              f"{r['pool_blocks_used']} blocks "
+              f"(vs {r['pool_blocks_without_sharing']} unshared)")
+    for r in chunked:
+        mode = f"chunk={r['prefill_chunk']}" if r["prefill_chunk"] \
+            else "monolithic"
+        print(f"{mode:>10}: long-prompt prefill over "
+              f"{r['prefill_steps']} steps ({r['mixed_steps']} mixed), "
+              f"max step {r['max_step_ms_during_prefill']:.1f}ms, "
+              f"ttft {r['long_ttft_steps']} steps")
     print(f"wrote {out_path}")
 
 

@@ -83,9 +83,15 @@ def worker_timeline(t: TimingProfile, fetch_seconds: float,
 
     ready = max(load_end, lib_end)
     assert all(s0 <= s1 for s0, s1 in spans.values())
-    assert not (not flags.prefetch
-                and spans["fetch"][0] < max(lib_end, cuda_end)), \
-        "no-prefetch fetch must wait for the full runtime init"
+    if not flags.prefetch:
+        # fetch must not overlap ANY runtime-init stage span: the classic
+        # workflow downloads only once container + lib + cuda are all
+        # done. Checked against the recorded spans (not the locals that
+        # defined fetch_start) so a future reordering of the init stages
+        # can't silently start the fetch early.
+        for stage in ("container", "lib", "cuda"):
+            assert spans["fetch"][0] >= spans[stage][1], \
+                f"no-prefetch fetch overlaps runtime init stage {stage!r}"
     assert ready >= max(s1 for _, s1 in spans.values()) - 1e-12
     return WorkerTimeline(ready=ready, spans=spans)
 

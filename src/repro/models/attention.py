@@ -86,12 +86,28 @@ def paged_kv_write(pages, new, block_tables, positions):
     return flat.at[idx].set(vals).reshape(pages.shape)
 
 
+def paged_kv_gather(pages, block_tables, n_tokens: int):
+    """Gather rows [0, n_tokens) of each sequence from the page pool into
+    a contiguous (B, n_tokens, Hkv, hd) slab — chunked prefill attends
+    over this history (pages written by earlier chunks or shared via the
+    prefix cache) with ``q_offset``. ``n_tokens`` is static."""
+    bs = pages.shape[1]
+    pos = jnp.arange(n_tokens)
+    flat = pages.reshape((-1,) + pages.shape[2:])
+
+    def one(bt_row):
+        return flat[bt_row[pos // bs] * bs + pos % bs]
+
+    return jax.vmap(one)(block_tables)
+
+
 def self_attention(cfg: ModelConfig, p: dict, x, *, positions,
                    causal: bool = True,
                    kv_cache: Optional[Tuple] = None,
                    decode: bool = False,
                    allow_append: bool = True,
-                   block_tables=None):
+                   block_tables=None,
+                   hist_len: int = 0):
     """x (B,S,d). positions (B,S) absolute positions of the tokens in x.
 
     Full-sequence mode (train/prefill): attends within x; if kv_cache slices
@@ -103,6 +119,13 @@ def self_attention(cfg: ModelConfig, p: dict, x, *, positions,
     When ``block_tables`` (B,nb) is given the kv_cache tuple holds *paged*
     pools (N,bs,Hkv,hd): writes go through :func:`paged_kv_write` and decode
     reads gather pages via the table (ops.paged_decode_attention).
+
+    ``hist_len`` (static, paged prefill only) marks x as a *chunk* whose
+    sequence already holds ``hist_len`` KV rows in the pool (earlier
+    chunks, or blocks shared through the prefix cache): the chunk's K/V
+    are written at ``positions`` and attention runs over the gathered
+    rows [0, hist_len + S) with ``q_offset=hist_len`` — bit-identical to
+    prefilling the whole sequence at once.
     Returns (out (B,S,d), (k_cache', v_cache') or None).
     """
     bsz, seq, _ = x.shape
@@ -117,6 +140,8 @@ def self_attention(cfg: ModelConfig, p: dict, x, *, positions,
 
     new_cache = None
     if not decode:
+        assert hist_len == 0 or block_tables is not None, \
+            "chunked prefill (hist_len > 0) needs the paged layout"
         if kv_cache is not None:
             ck, cv = kv_cache
             if block_tables is not None:
@@ -128,8 +153,17 @@ def self_attention(cfg: ModelConfig, p: dict, x, *, positions,
                 cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
                                                   (0, 0, 0, 0))
             new_cache = (ck, cv)
-        q_off = 0
-        out = ops.flash_attention(q, k, v, causal=causal, q_offset=q_off)
+        if hist_len:
+            # chunk continuation: attend over history + chunk from the
+            # pool (the chunk's own K/V round-trip through the pages —
+            # identity, the pool dtype is the compute dtype)
+            total = hist_len + seq
+            k_att = paged_kv_gather(ck, block_tables, total)
+            v_att = paged_kv_gather(cv, block_tables, total)
+            out = ops.flash_attention(q, k_att, v_att, causal=causal,
+                                      q_offset=hist_len)
+        else:
+            out = ops.flash_attention(q, k, v, causal=causal, q_offset=0)
     else:
         assert kv_cache is not None and seq == 1
         ck, cv = kv_cache

@@ -159,7 +159,8 @@ def head(cfg: ModelConfig, params: dict, x):
 
 
 def _period_step(cfg: ModelConfig, pslice: dict, cslice, x, positions,
-                 decode: bool, causal: bool, block_tables=None):
+                 decode: bool, causal: bool, block_tables=None,
+                 hist_len: int = 0):
     aux = jnp.zeros((), jnp.float32)
     new_cache = {}
     for i, (mix, mlp) in enumerate(_period_plan(cfg)):
@@ -177,7 +178,8 @@ def _period_step(cfg: ModelConfig, pslice: dict, cslice, x, positions,
                                         positions=positions, causal=causal,
                                         kv_cache=kvc, decode=decode,
                                         block_tables=(block_tables if paged
-                                                      else None))
+                                                      else None),
+                                        hist_len=hist_len if paged else 0)
             if nc is not None:
                 if isinstance(nc, tuple) and nc[0] == "append":
                     # §Perf it.5: only the new token's K/V leave the scan;
@@ -214,17 +216,20 @@ def _period_step(cfg: ModelConfig, pslice: dict, cslice, x, positions,
 def run_blocks(cfg: ModelConfig, blocks: dict, x, positions, *,
                cache: Optional[dict] = None, decode: bool = False,
                causal: bool = True, remat: str = "none",
-               block_tables=None):
+               block_tables=None, hist_len: int = 0):
     """Scan the stacked periods. ``blocks``/``cache`` leading dim = periods
     (possibly a stage's slice). ``block_tables`` (B,nb) addresses paged attn
     pools (shared across periods — the page id axis is per-period).
+    ``hist_len`` (static) marks x as a prefill *chunk* with that many KV
+    rows already in the paged pools (see attention.self_attention).
     Returns (x, new_cache, aux_sum)."""
 
     def step(carry, xs):
         h, aux = carry
         pslice, cslice = xs
         h, new_c, a = _period_step(cfg, pslice, cslice, h, positions,
-                                   decode, causal, block_tables=block_tables)
+                                   decode, causal, block_tables=block_tables,
+                                   hist_len=hist_len)
         return (h, aux + a), new_c
 
     if remat == "full":

@@ -57,15 +57,19 @@ class RequestMetrics:
     """Lifecycle counters in scheduler steps.
 
     ``ttft_steps`` is submit -> first token (1 for a request admitted at
-    the very next step); ``queue_steps`` is the deferred-admission part of
-    that wait; ``tpot_steps`` is the decode-steps-per-generated-token
-    proxy (1.0 when the request decoded every step it was resident).
+    the very next step); ``queue_steps`` is the waiting part of that TTFT
+    (deferred admission, plus prefill-chunk steps under chunked prefill);
+    ``tpot_steps`` is the decode-steps-per-generated-token proxy (1.0
+    when the request decoded every step it was resident);
+    ``cached_tokens`` is the prompt prefix served from the paged prefix
+    cache — tokens whose KV was reused instead of recomputed.
     """
     submit_step: int = 0
-    admit_step: Optional[int] = None      # step of prefill / first token
+    admit_step: Optional[int] = None      # step of the first token
     finish_step: Optional[int] = None
     decode_steps: int = 0                 # decode passes it took part in
     n_tokens: int = 0                     # tokens emitted so far
+    cached_tokens: int = 0                # prompt tokens hit in prefix cache
 
     @property
     def ttft_steps(self) -> Optional[int]:
@@ -98,12 +102,16 @@ class TokenEvent:
 class StepOutput:
     """What one ``Engine.step()`` produced, in emission order: prefill
     tokens of newly admitted requests first (admission order), then one
-    decode token per resident request (slot order)."""
+    decode token per resident request (slot order). Under chunked prefill
+    a step can make prefill progress without emitting a prefill token —
+    ``prefill_tokens`` counts the prompt tokens computed this step, so a
+    mixed step shows both ``prefill_tokens > 0`` and decode events."""
     step: int
     events: Tuple[TokenEvent, ...]
     finished: Tuple[int, ...]             # rids that finished this step
     num_active: int                       # residents after the step
     num_queued: int                       # still waiting for admission
+    prefill_tokens: int = 0               # prompt tokens prefilled this step
 
 
 @dataclass(frozen=True)

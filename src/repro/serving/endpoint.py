@@ -140,10 +140,13 @@ class ServerlessFrontend:
                    free_hbm: Optional[Dict[str, int]] = None,
                    force_s: Optional[int] = None, min_stages: int = 1,
                    max_batch: int = 4, max_seq: int = 128,
-                   paged: Optional[bool] = None) -> ServingEndpoint:
+                   paged: Optional[bool] = None,
+                   prefix_cache: bool = False,
+                   prefill_chunk: Optional[int] = None) -> ServingEndpoint:
         """Alg. 1 cold start: pick a pipeline scheme, slice each stage's
         parameters, and return a live endpoint (its ``scheme`` attribute
-        records the plan)."""
+        records the plan). ``prefix_cache``/``prefill_chunk`` pass through
+        to the engine (paged layout only) and survive consolidation."""
         dep = self._deployed[name]
         scheme = self.controller.plan_cold_start(name, free_hbm, now,
                                                  force_s=force_s)
@@ -151,7 +154,8 @@ class ServerlessFrontend:
         stage_params = [dep.model.slice_stage_params(dep.params, n_stages, i)
                         for i in range(n_stages)]
         eng = Engine(dep.cfg, stage_params, max_batch=max_batch,
-                     max_seq=max_seq, paged=paged)
+                     max_seq=max_seq, paged=paged,
+                     prefix_cache=prefix_cache, prefill_chunk=prefill_chunk)
         return ServingEndpoint(eng, scheme=scheme)
 
     def full_params(self, name: str) -> dict:

@@ -21,8 +21,21 @@ KV layouts (``paged`` flag, default from ``ops.decode_mode()``):
   * paged — attention KV lives in a shared page pool addressed through the
     BlockManager's per-request block tables: prefill writes into allocated
     blocks, decode appends through ``extend``, admission defers requests
-    when ``can_allocate`` says the pool can't cover them (no MemoryError
-    mid-flight), and consolidation gathers exactly the live blocks.
+    when the pool can't cover them (no MemoryError mid-flight), and
+    consolidation gathers exactly the live blocks.
+
+Paged engines additionally support (attention-only decoder models):
+  * ``prefix_cache=True`` — admission matches each prompt against the
+    BlockManager's content-addressed prefix index and prefills only the
+    suffix; shared blocks are reference-counted, a fully-cached prompt
+    copies its last block on write, and finished requests' blocks stay
+    cached (LRU-evicted before admission ever defers). Greedy outputs
+    are bit-exact with the uncached engine.
+  * ``prefill_chunk=N`` — prefill runs in chunks of at most N tokens per
+    step, interleaved with decode (*mixed steps*): a long prompt no
+    longer stalls in-flight decodes for a whole forward, so one
+    request's TTFT can't starve everyone else's ITL. Half-prefilled
+    requests survive §6.2 consolidation.
 """
 
 from __future__ import annotations
@@ -30,6 +43,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
+import math
 from dataclasses import dataclass, field
 from typing import Iterator, List, Optional, Sequence, Union
 
@@ -63,6 +77,7 @@ class GenRequest:
     done: bool = False
     finish_reason: Optional[FinishReason] = None
     metrics: RequestMetrics = field(default_factory=RequestMetrics)
+    prefilled: int = 0          # prompt rows with KV computed (incl. cached)
 
     @property
     def max_new(self) -> int:
@@ -73,6 +88,10 @@ class GenRequest:
         """Prompt tokens incl. any prefix embeddings."""
         return len(self.prompt) + (0 if self.prefix_embeds is None
                                    else self.prefix_embeds.shape[0])
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.prefilled >= self.prompt_total
 
     @property
     def pos_next(self) -> int:
@@ -88,12 +107,27 @@ class GenRequest:
 class Engine:
     def __init__(self, cfg: ModelConfig, stage_params: Sequence[dict],
                  max_batch: int = 4, max_seq: int = 128,
-                 block_size: int = 16, paged: Optional[bool] = None):
+                 block_size: int = 16, paged: Optional[bool] = None,
+                 prefix_cache: bool = False,
+                 prefill_chunk: Optional[int] = None):
         self.cfg = cfg
         self.model = Model(cfg)
         if paged is None:
             paged = ops.decode_mode() == "paged"
         self.paged = paged
+        if prefix_cache or prefill_chunk is not None:
+            if not paged:
+                raise ValueError("prefix_cache / prefill_chunk need the "
+                                 "paged KV layout (Engine(paged=True))")
+            if any(m != "attn" for m in cfg.mixer_pattern) or cfg.is_encdec:
+                raise ValueError(
+                    "prefix_cache / prefill_chunk need an attention-only "
+                    "decoder: recurrent mixer state is not block-shareable "
+                    f"({cfg.name})")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        self.prefix_cache = prefix_cache
+        self.prefill_chunk = prefill_chunk
         self.max_batch = max_batch
         self.max_seq = max_seq
         kv_per_tok = 2 * cfg.n_kv_heads * cfg.head_dim * \
@@ -101,7 +135,7 @@ class Engine:
         n_blocks = max_batch * (max_seq // block_size + 1)
         self.block_mgr = BlockManager(
             n_blocks=n_blocks, block_size=block_size,
-            bytes_per_token=max(kv_per_tok, 1))
+            bytes_per_token=max(kv_per_tok, 1), prefix_cache=prefix_cache)
         # one extra trash page: idle slots' block-table rows point here so
         # their (unused) decode writes never land in a live page
         self._null_page = n_blocks
@@ -118,6 +152,9 @@ class Engine:
         self.steps = 0
         self.retired = False
         self.last_migration_bytes: Optional[int] = None
+        # per-step prefill token budget (set by step())
+        self._prefill_budget: float = math.inf
+        self._step_prefill_tokens: int = 0
 
     def _check_live(self):
         if self.retired:
@@ -155,30 +192,30 @@ class Engine:
     def _free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
 
-    def _blocks_for(self, n_tokens: int) -> int:
-        return -(-n_tokens // self.block_mgr.block_size)
-
     def _can_admit(self, req: GenRequest) -> bool:
-        """Admission control: the pool must cover the prompt now *and* the
-        worst-case decode tail of every in-flight request plus this one, so
-        ``extend`` can never fail mid-flight. (submit() already bounds
-        every request to max_seq total tokens.)"""
-        if not self.block_mgr.can_allocate(req.prompt_total):
-            return False
+        """Admission control, one authoritative BlockManager check: the
+        pool must cover this request's worst-case total (prompt + decode
+        tail — which subsumes the prompt itself) on top of the worst-case
+        tails already reserved by in-flight requests, so ``extend`` can
+        never fail mid-flight. (submit() already bounds every request to
+        max_seq total tokens.) Deliberately conservative under the prefix
+        cache: a hit only means *fewer* fresh blocks are taken."""
+        bm = self.block_mgr
         reserved = 0
         for r in self.active():
-            held = len(self.block_mgr.tables[r.rid].blocks)
-            reserved += max(0, self._blocks_for(r.prompt_total + r.max_new)
+            held = len(bm.tables[r.rid].blocks)
+            reserved += max(0, bm.blocks_needed(r.prompt_total + r.max_new)
                             - held)
-        need = self._blocks_for(req.prompt_total + req.max_new)
-        return self.block_mgr.free_blocks - reserved >= need
+        need = bm.blocks_needed(req.prompt_total + req.max_new)
+        return bm.free_blocks - reserved >= need
 
     def _admit(self, events: List[TokenEvent]):
-        """Admit from the queue head while slots and blocks allow. A
-        request whose prefill token already satisfies its finish condition
-        (max_new=1, eos, stop token) finishes here and frees its slot
-        immediately — it never occupies a decode step."""
-        while self.queue:
+        """Admit from the queue head while slots, blocks, and the step's
+        prefill budget allow. A request whose prefill token already
+        satisfies its finish condition (max_new=1, eos, stop token)
+        finishes here and frees its slot immediately — it never occupies
+        a decode step."""
+        while self.queue and self._prefill_budget > 0:
             free = self._free_slots()
             if not free:
                 break
@@ -187,39 +224,88 @@ class Engine:
             req = self.queue.popleft()
             req.slot = free[0]
             self.slots[req.slot] = req
-            self._prefill(req, events)
+            self._allocate(req)
+            self._prefill_progress(req, events)
 
-    def _block_tables(self) -> jnp.ndarray:
+    def _allocate(self, req: GenRequest):
+        """Build the request's block table. With the prefix cache on, the
+        prompt's token chain is matched against the index: the shared
+        blocks need no prefill compute (``prefilled`` starts past them)
+        and any copy-on-write of a fully-cached prompt's last block is
+        applied to the worker pools right here, before anything reads or
+        evicts the source page."""
+        tokens = None
+        if self.prefix_cache and req.prefix_embeds is None:
+            # prefix embeddings are not part of the token chain — those
+            # requests prefill from scratch
+            tokens = req.prompt
+        table = self.block_mgr.allocate(req.rid, req.prompt_total,
+                                        tokens=tokens)
+        req.prefilled = table.cached_tokens
+        req.metrics.cached_tokens = table.cached_tokens
+        for src, dst in self.block_mgr.drain_copies():
+            for w in self.workers:
+                w.copy_pages(src, dst)
+
+    def _block_tables(self, decode: bool = False) -> jnp.ndarray:
         """(B, nb) int32 page ids from the BlockManager; idle slots (and
-        tails past a request's live blocks) point at the null page."""
+        tails past a request's live blocks) point at the null page. For
+        ``decode``, half-prefilled slots are nulled too: they take no part
+        in the decode batch and their dummy writes must not land in live
+        (possibly shared) pages."""
         bt = np.full((self.max_batch, self._table_width), self._null_page,
                      np.int32)
         for r in self.active():
+            if decode and not r.prefill_done:
+                continue
             blocks = self.block_mgr.tables[r.rid].blocks
             bt[r.slot, :len(blocks)] = blocks
         return jnp.asarray(bt)
 
-    def _prefill(self, req: GenRequest, events: List[TokenEvent]):
-        tokens = jnp.asarray([req.prompt], jnp.int32)
+    def _prefill_progress(self, req: GenRequest, events: List[TokenEvent]):
+        """Advance this request's prefill within the step's token budget.
+        Monolithic engines (prefill_chunk=None) run the whole remainder in
+        one forward; chunked engines stop at the budget and resume next
+        step. Emits the first token when the prompt completes."""
+        while not req.prefill_done and self._prefill_budget > 0:
+            n = req.prompt_total - req.prefilled
+            if req.prefix_embeds is None:
+                n = min(n, self._prefill_budget)
+            # prefix-embed prompts prefill monolithically (their embeds
+            # are not re-sliceable per chunk); they still charge the
+            # budget so co-resident prefills stay bounded
+            self._prefill_chunk(req, n, events)
+            self._prefill_budget -= n
+            self._step_prefill_tokens += n
+
+    def _prefill_chunk(self, req: GenRequest, n: int,
+                       events: List[TokenEvent]):
+        """One prefill forward over the next ``n`` prompt rows."""
+        start = req.prefilled
         prefix = None
         if req.prefix_embeds is not None:
+            assert start == 0 and n == req.prompt_total
             prefix = jnp.asarray(req.prefix_embeds)[None]
-        total = req.prompt_total
-        positions = jnp.arange(total, dtype=jnp.int32)[None]
-        self.block_mgr.allocate(req.rid, total)
+            tok = req.prompt
+        else:
+            tok = req.prompt[start:start + n]
+        h = jnp.asarray([tok], jnp.int32)
+        positions = jnp.arange(start, start + n, dtype=jnp.int32)[None]
         bt = None
         if self.paged:
             bt = self._block_tables()[req.slot:req.slot + 1]
-        h = tokens
         for w in self.workers:
             h = w.prefill_slot(h, req.slot, positions, prefix_embeds=prefix,
-                               block_tables=bt)
-        req.metrics.admit_step = self.steps
-        first = sample_token(h[0, 0], req.params, 0)
-        reason = self._emit(req, first, events)
-        self.block_mgr.extend(req.rid)
-        if reason is not None:
-            self._finish(req, reason)
+                               block_tables=bt, hist_len=start)
+        req.prefilled = start + n
+        self.block_mgr.commit(req.rid, req.prefilled)
+        if req.prefill_done:
+            req.metrics.admit_step = self.steps
+            first = sample_token(h[0, 0], req.params, 0)
+            reason = self._emit(req, first, events)
+            self.block_mgr.extend(req.rid, token=first)
+            if reason is not None:
+                self._finish(req, reason)
 
     # -------------------------------------------------------------- step
     def active(self) -> List[GenRequest]:
@@ -245,14 +331,24 @@ class Engine:
         return reason
 
     def step(self) -> StepOutput:
-        """One scheduler iteration: admit then one decode for all slots.
-        Returns the step's newly emitted token events (streaming)."""
+        """One scheduler iteration: resume half-prefilled residents, admit
+        from the queue, then one decode for every fully-prefilled slot —
+        a *mixed* step when chunked prefill and decode coexist. Returns
+        the step's newly emitted token events (streaming)."""
         self._check_live()
         self.steps += 1
         events: List[TokenEvent] = []
         n_done = len(self.finished)
+        self._prefill_budget = (math.inf if self.prefill_chunk is None
+                                else self.prefill_chunk)
+        self._step_prefill_tokens = 0
+        # residents first (admission order), then the queue: a long prompt
+        # mid-prefill keeps priority over newly arriving requests
+        for r in sorted(self.active(), key=lambda r: r.rid):
+            if not r.prefill_done:
+                self._prefill_progress(r, events)
         self._admit(events)
-        reqs = self.active()
+        reqs = [r for r in self.active() if r.prefill_done]
         if reqs:
             tokens = np.zeros((self.max_batch, 1), np.int32)
             positions = np.zeros((self.max_batch, 1), np.int32)
@@ -261,7 +357,7 @@ class Engine:
                 positions[r.slot, 0] = r.pos_next
             h = jnp.asarray(tokens)
             pos = jnp.asarray(positions)
-            bt = self._block_tables() if self.paged else None
+            bt = self._block_tables(decode=True) if self.paged else None
             for w in self.workers:
                 h = w.decode(h, pos, block_tables=bt)
             greedy = None
@@ -275,12 +371,16 @@ class Engine:
                                        len(r.generated))
                 r.metrics.decode_steps += 1
                 reason = self._emit(r, nxt, events)
-                self.block_mgr.extend(r.rid)
+                # the fed token's KV is now material through pos_next + 1
+                self.block_mgr.commit(
+                    r.rid, r.prompt_total + len(r.generated) - 1)
+                self.block_mgr.extend(r.rid, token=nxt)
                 if reason is not None:
                     self._finish(r, reason)
         return StepOutput(self.steps, tuple(events),
                           tuple(r.rid for r in self.finished[n_done:]),
-                          len(self.active()), len(self.queue))
+                          len(self.active()), len(self.queue),
+                          prefill_tokens=self._step_prefill_tokens)
 
     def _finish(self, req: GenRequest, reason: FinishReason):
         req.done = True
@@ -338,15 +438,22 @@ class Engine:
 
     def consolidated(self, full_params: dict) -> "Engine":
         """Scale-down: gather the distributed KV/state to one standalone
-        worker holding the full model; in-flight requests continue. In
-        paged mode the gather is block-granular (§6.2: only the blocks the
-        BlockManager reports live move) and ``last_migration_bytes`` is the
-        exact byte count gathered."""
+        worker holding the full model; in-flight requests continue —
+        including half-prefilled ones, whose allocated blocks are live and
+        move with them. In paged mode the gather is block-granular (§6.2:
+        only the blocks the BlockManager reports live move, each shared
+        block exactly once) and ``last_migration_bytes`` is the exact byte
+        count gathered. Refcount-zero prefix-cache blocks are dropped from
+        the index rather than shipped — correctness needs only the live
+        set."""
         self._check_live()
         eng = Engine(self.cfg, [full_params], self.max_batch, self.max_seq,
-                     self.block_mgr.block_size, paged=self.paged)
+                     self.block_mgr.block_size, paged=self.paged,
+                     prefix_cache=self.prefix_cache,
+                     prefill_chunk=self.prefill_chunk)
         stage_caches = [w.cache for w in self.workers]
         if self.paged:
+            self.block_mgr.drop_unreferenced_cache()
             live = self.block_mgr.blocks_of(r.rid for r in self.active())
             cache, moved = gather_stage_caches_with_bytes(
                 stage_caches, live_blocks=live, target_stage=0)
@@ -371,7 +478,9 @@ class Engine:
         for _ in range(1, len(self.workers)):
             others.append(Engine(self.cfg, [full_params], self.max_batch,
                                  self.max_seq, self.block_mgr.block_size,
-                                 paged=self.paged))
+                                 paged=self.paged,
+                                 prefix_cache=self.prefix_cache,
+                                 prefill_chunk=self.prefill_chunk))
         return [first] + others
 
     def retire(self):

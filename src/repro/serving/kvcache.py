@@ -1,19 +1,58 @@
-"""Paged-KV block bookkeeping (vLLM-style block manager).
+"""Paged-KV block bookkeeping: a ref-counted, content-addressed page pool.
 
 In paged mode (Engine(paged=True)) the BlockManager IS the serving memory
 system: the block ids it hands out index the workers' shared page pools,
-prefill/decode write through them, admission consults ``can_allocate``,
-and §6.2 KV-migration gathers exactly ``blocks_of`` the in-flight
-requests ("query the cache block manager to obtain the blocks used by
-existing requests"). In the slot-contiguous layout it remains the paged
+prefill/decode write through them, admission reserves against
+``free_blocks``/``blocks_needed`` (Engine._can_admit), and §6.2
+KV-migration gathers exactly ``blocks_of`` the in-flight requests
+("query the cache block manager to obtain the blocks used by existing
+requests"). In the slot-contiguous layout it remains the paged
 *accounting* twin of the contiguous caches and quotes migration byte
 costs.
+
+With ``prefix_cache=True`` the pool is additionally *content-addressed*
+(vLLM-style automatic prefix caching):
+
+  * every **full** block whose KV has actually been computed is
+    registered under a token-chain hash (sha256 over the block's tokens
+    chained with the previous block's hash, so a block id stands for a
+    whole prefix, not a bag of tokens);
+  * ``allocate`` matches a new request's prompt against the index and
+    shares the longest cached prefix — shared blocks just gain a
+    reference, only the suffix needs fresh blocks (and fresh compute);
+  * a fully-cached prompt still recomputes its last token (the engine
+    needs logits to sample from), so the last matched block is
+    **copied-on-write**: the match keeps a private copy and the shared
+    page is never written through;
+  * ``free`` keeps registered blocks around at refcount zero as an LRU
+    cache instead of returning them to the free list; ``allocate`` /
+    ``extend`` evict those cold blocks LRU-first when the free list runs
+    dry, so cached prefixes never cause admission to defer.
+
+Registration is **engine-driven** (``commit``): blocks enter the index
+only once their KV has been written by a prefill chunk or decode step —
+a half-prefilled request never exposes garbage pages to other requests.
+
+``blocks_of`` / ``migration_bytes`` are dedup-aware: a block shared by
+several in-flight requests is reported (and shipped by §6.2
+consolidation) exactly once.
 """
 
 from __future__ import annotations
 
+import hashlib
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def _chain_hash(prev: bytes, block_tokens: Sequence[int]) -> bytes:
+    """Hash of a full block's token ids chained onto its prefix's hash."""
+    h = hashlib.sha256(prev)
+    h.update(np.asarray(list(block_tokens), np.int64).tobytes())
+    return h.digest()
 
 
 @dataclass
@@ -21,60 +60,227 @@ class BlockTable:
     request_id: int
     blocks: List[int] = field(default_factory=list)
     length: int = 0                  # tokens written
+    tokens: Optional[List[int]] = None   # token-id chain (None: not hashable)
+    cached_tokens: int = 0           # prefix tokens served from the cache
+    _n_hashed: int = 0               # full blocks whose chain hash is known
+    _chain: bytes = b""              # running chain hash over those blocks
 
 
 class BlockManager:
     def __init__(self, n_blocks: int, block_size: int,
-                 bytes_per_token: int):
+                 bytes_per_token: int, prefix_cache: bool = False):
         self.n_blocks = n_blocks
         self.block_size = block_size
         self.bytes_per_token = bytes_per_token
+        self.prefix_cache = prefix_cache
         self._free: List[int] = list(range(n_blocks - 1, -1, -1))
+        self._ref: List[int] = [0] * n_blocks
         self.tables: Dict[int, BlockTable] = {}
+        # content-addressing state (prefix_cache only)
+        self._index: Dict[bytes, int] = {}       # chain hash -> block id
+        self._hash_of: Dict[int, bytes] = {}     # block id -> chain hash
+        self._cached: "OrderedDict[int, None]" = OrderedDict()  # LRU, ref==0
+        self.pending_copies: List[Tuple[int, int]] = []  # COW (src, dst)
+        # stats
+        self.cache_queries = 0
+        self.cache_hit_tokens = 0
+        self.evictions = 0
 
     # ------------------------------------------------------------ alloc
-    def can_allocate(self, n_tokens: int) -> bool:
-        need = -(-n_tokens // self.block_size)
-        return len(self._free) >= need
+    def blocks_needed(self, n_tokens: int) -> int:
+        """Blocks required to hold ``n_tokens`` cache rows (ceil div)."""
+        return -(-n_tokens // self.block_size)
 
-    def allocate(self, request_id: int, n_tokens: int) -> BlockTable:
-        need = -(-n_tokens // self.block_size)
-        if len(self._free) < need:
+    def can_allocate(self, n_tokens: int) -> bool:
+        """Convenience query for external callers. The engine's admission
+        control does NOT use this — it reserves worst-case decode tails
+        across all residents in one check (Engine._can_admit)."""
+        return self.free_blocks >= self.blocks_needed(n_tokens)
+
+    def _take_block(self) -> int:
+        """Pop a free block, evicting the LRU cached (refcount-zero)
+        block when the free list is dry. Callers check ``free_blocks``."""
+        if self._free:
+            return self._free.pop()
+        blk, _ = self._cached.popitem(last=False)      # least recently used
+        h = self._hash_of.pop(blk)
+        if self._index.get(h) == blk:
+            del self._index[h]
+        self.evictions += 1
+        return blk
+
+    def _ref_block(self, blk: int):
+        self._ref[blk] += 1
+        self._cached.pop(blk, None)   # a referenced block is not evictable
+
+    def _unref_block(self, blk: int):
+        self._ref[blk] -= 1
+        assert self._ref[blk] >= 0, f"refcount underflow on block {blk}"
+        if self._ref[blk] > 0:
+            return
+        h = self._hash_of.get(blk)
+        if h is not None and self._index.get(h) == blk:
+            self._cached[blk] = None          # keep content, LRU tail
+            self._cached.move_to_end(blk)
+        else:
+            self._hash_of.pop(blk, None)
+            self._free.append(blk)
+
+    def allocate(self, request_id: int, n_tokens: int,
+                 tokens: Optional[Sequence[int]] = None) -> BlockTable:
+        """Build a block table for a request of ``n_tokens`` prompt rows.
+
+        When the pool is content-addressed and ``tokens`` are given, the
+        longest indexed prefix (full blocks only) is shared instead of
+        re-allocated; ``BlockTable.cached_tokens`` tells the engine how
+        many prompt tokens need no prefill compute. A fully-cached prompt
+        is capped at ``n_tokens - 1`` and the block holding the final
+        token is copied-on-write (see ``drain_copies``).
+        """
+        t = BlockTable(request_id,
+                       tokens=list(tokens) if tokens is not None else None)
+        shared: List[int] = []
+        chain = b""
+        if self.prefix_cache and tokens is not None:
+            assert len(tokens) >= n_tokens, "token chain shorter than prompt"
+            self.cache_queries += 1
+            h = b""
+            for i in range(n_tokens // self.block_size):
+                h = _chain_hash(h, tokens[i * self.block_size:
+                                          (i + 1) * self.block_size])
+                blk = self._index.get(h)
+                if blk is None:
+                    break
+                shared.append(blk)
+                chain = h
+        # always recompute >= 1 prompt token (the engine samples from the
+        # last prefill logit), so a full-prompt hit is capped at n-1
+        cached = min(len(shared) * self.block_size, max(n_tokens - 1, 0))
+        for blk in shared:
+            self._ref_block(blk)
+        cow = cached < len(shared) * self.block_size
+        # fresh blocks: the suffix, plus a private copy of the COW block
+        need = self.blocks_needed(n_tokens) - len(shared) + (1 if cow else 0)
+        if len(self._free) + len(self._cached) < need:
+            for blk in shared:                # roll back the prefix refs
+                self._unref_block(blk)
             raise MemoryError("out of KV blocks")
-        t = BlockTable(request_id, [self._free.pop() for _ in range(need)],
-                       n_tokens)
+        blocks = list(shared)
+        if cow:
+            src = blocks.pop()                # stays pinned via its ref
+            dst = self._take_block()
+            self._ref[dst] += 1
+            self.pending_copies.append((src, dst))
+            blocks.append(dst)
+        for _ in range(need - (1 if cow else 0)):
+            blk = self._take_block()
+            self._ref[blk] += 1
+            blocks.append(blk)
+        t.blocks = blocks
+        t.length = n_tokens
+        t.cached_tokens = cached
+        t._n_hashed = len(shared)             # chain covers the COW block too
+        t._chain = chain
+        self.cache_hit_tokens += cached
         self.tables[request_id] = t
         return t
 
-    def extend(self, request_id: int, n_tokens: int = 1):
+    def drain_copies(self) -> List[Tuple[int, int]]:
+        """Hand the engine the pending COW ``(src, dst)`` page copies and
+        release the source pins. The caller must apply the copies to the
+        worker pools before the next ``allocate``/``extend`` call (which
+        may evict a released source)."""
+        out, self.pending_copies = self.pending_copies, []
+        for src, _ in out:
+            self._unref_block(src)
+        return out
+
+    def extend(self, request_id: int, n_tokens: int = 1,
+               token: Optional[int] = None):
         t = self.tables[request_id]
         new_len = t.length + n_tokens
-        need = -(-new_len // self.block_size) - len(t.blocks)
+        need = self.blocks_needed(new_len) - len(t.blocks)
+        if need > self.free_blocks:
+            raise MemoryError("out of KV blocks")
         for _ in range(need):
-            if not self._free:
-                raise MemoryError("out of KV blocks")
-            t.blocks.append(self._free.pop())
+            blk = self._take_block()
+            self._ref[blk] += 1
+            t.blocks.append(blk)
         t.length = new_len
+        if t.tokens is not None:
+            if token is not None and n_tokens == 1:
+                t.tokens.append(token)
+            else:                 # chain broken: stop hashing this table
+                t.tokens = None
+        return t
+
+    def commit(self, request_id: int, n_valid: int):
+        """Register full blocks whose KV is materialized through row
+        ``n_valid`` in the prefix index. Engine-driven: called after each
+        prefill chunk / decode write, so the index never points at pages
+        that have not been computed yet."""
+        if not self.prefix_cache:
+            return
+        t = self.tables.get(request_id)
+        if t is None or t.tokens is None:
+            return
+        bs = self.block_size
+        limit = min(n_valid, len(t.tokens), t.length)
+        while (t._n_hashed + 1) * bs <= limit:
+            i = t._n_hashed
+            h = _chain_hash(t._chain, t.tokens[i * bs:(i + 1) * bs])
+            blk = t.blocks[i]
+            if h not in self._index:          # first writer wins; duplicate
+                self._index[h] = blk          # content is simply unshared
+                self._hash_of[blk] = h
+            t._chain = h
+            t._n_hashed += 1
 
     def free(self, request_id: int):
         t = self.tables.pop(request_id, None)
         if t:
-            self._free.extend(reversed(t.blocks))
+            for blk in reversed(t.blocks):
+                self._unref_block(blk)
+
+    def drop_unreferenced_cache(self):
+        """Forget every refcount-zero cached block (index entries and
+        all). Used at §6.2 consolidation: the gather only ships blocks of
+        live requests, so cold cached pages would dangle in the new
+        pool."""
+        for blk in self._cached:
+            h = self._hash_of.pop(blk, None)
+            if h is not None:
+                self._index.pop(h, None)
+            self._free.append(blk)
+        self._cached.clear()
 
     # ---------------------------------------------------------- queries
     def blocks_of(self, request_ids) -> List[int]:
-        out = []
+        """Unique blocks backing these requests; a block shared by several
+        requests (prefix cache) appears exactly once."""
+        out: Dict[int, None] = {}
         for rid in request_ids:
             t = self.tables.get(rid)
             if t:
-                out.extend(t.blocks)
-        return out
+                for blk in t.blocks:
+                    out[blk] = None
+        return list(out)
 
     def migration_bytes(self, request_ids, n_layers: int) -> int:
-        """Bytes to move when migrating these requests' KV (all layers)."""
+        """Bytes to move when migrating these requests' KV (all layers).
+        Dedup-aware: each shared block is counted once."""
         blocks = self.blocks_of(request_ids)
         return len(blocks) * self.block_size * self.bytes_per_token * n_layers
 
     @property
     def free_blocks(self) -> int:
-        return len(self._free)
+        """Blocks obtainable right now: truly free plus evictable cached."""
+        return len(self._free) + len(self._cached)
+
+    @property
+    def n_cached(self) -> int:
+        """Refcount-zero blocks currently held by the prefix cache."""
+        return len(self._cached)
+
+    def refcount(self, block: int) -> int:
+        return self._ref[block]

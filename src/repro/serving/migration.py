@@ -59,10 +59,11 @@ def gather_stage_caches_with_bytes(
     return out, moved
 
 
-def gather_stage_caches(stage_caches: List[dict],
-                        live_blocks: Optional[Sequence[int]] = None) -> dict:
-    """Concatenate stage cache trees along the leading (period) axis."""
-    cache, _ = gather_stage_caches_with_bytes(stage_caches, live_blocks)
+def gather_stage_caches(stage_caches: List[dict]) -> dict:
+    """Concatenate stage cache trees along the leading (period) axis
+    (whole caches — the block-granular path is
+    ``gather_stage_caches_with_bytes`` with ``live_blocks``)."""
+    cache, _ = gather_stage_caches_with_bytes(stage_caches)
     return cache
 
 

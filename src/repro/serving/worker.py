@@ -51,13 +51,14 @@ class StageWorker:
             cfg, max_batch, max_seq, dt, n_periods=p1 - p0, paged=paged,
             n_pages=n_pages, page_size=page_size)
         self._prefill_fn = jax.jit(self._prefill_impl,
-                                   static_argnames=("with_prefix",))
+                                   static_argnames=("with_prefix",
+                                                    "hist_len"))
         self._decode_fn = jax.jit(self._decode_impl)
 
     # ----------------------------------------------------------- impl fns
     def _prefill_impl(self, params, x_in, positions, fresh_cache,
                       block_tables=None, prefix_embeds=None, *,
-                      with_prefix=False):
+                      with_prefix=False, hist_len=0):
         cfg = self.cfg
         if self.first:
             x = transformer.embed(cfg, params, x_in, positions,
@@ -68,7 +69,7 @@ class StageWorker:
             x = x_in
         x, new_cache, _ = transformer.run_blocks(
             cfg, params["blocks"], x, positions, cache=fresh_cache,
-            block_tables=block_tables)
+            block_tables=block_tables, hist_len=hist_len)
         out = transformer.head(cfg, params, x[:, -1:]) if self.last else x
         return out, new_cache
 
@@ -88,12 +89,21 @@ class StageWorker:
 
     # ------------------------------------------------------------ public
     def prefill_slot(self, x_in, slot: int, positions, prefix_embeds=None,
-                     block_tables=None):
+                     block_tables=None, hist_len: int = 0):
         """Prefill one request (batch 1 inputs) into cache slot `slot`.
         Recurrent states start from zero (fresh cache), then results are
         scattered into the live batched cache. Paged attention KV is
         written straight into the shared page pool at the blocks named by
-        ``block_tables`` (1, nb)."""
+        ``block_tables`` (1, nb). ``hist_len > 0`` (paged, attention-only
+        models) marks x_in as a chunk continuing a sequence whose first
+        ``hist_len`` rows already live in the pool.
+
+        ``hist_len`` is a static jit argument, so each distinct
+        (chunk_len, hist_len) pair compiles once — fine at smoke scale
+        where chunk shapes recur; a production port would pad chunks to a
+        fixed size and mask via kv_len to keep one executable."""
+        assert hist_len == 0 or self.paged, \
+            "chunked prefill requires the paged layout"
         p0, p1 = self.periods
         dt = jnp.dtype(self.cfg.dtype)
         # in paged mode only the recurrent slots start fresh at batch 1
@@ -109,7 +119,8 @@ class StageWorker:
                      for name in self.cache}
         out, one_cache = self._prefill_fn(self.params, x_in, positions,
                                           fresh, block_tables, prefix_embeds,
-                                          with_prefix=prefix_embeds is not None)
+                                          with_prefix=prefix_embeds is not None,
+                                          hist_len=hist_len)
 
         def scatter(full, one):
             return jax.lax.dynamic_update_slice(
@@ -133,6 +144,22 @@ class StageWorker:
         out, self.cache = self._decode_fn(self.params, x_in, positions,
                                           self.cache, block_tables)
         return out
+
+    def copy_pages(self, src: int, dst: int):
+        """Copy page ``src`` onto page ``dst`` in every attention pool
+        (all periods) — the engine's copy-on-write when a prefix-cache
+        hit covers a whole prompt and the final token must be recomputed
+        into a private block. The functional ``.at[].set`` rebuilds each
+        pool array; acceptable for the occasional full-prompt hit at
+        smoke scale (a production port would batch pending copies into
+        one donated scatter)."""
+
+        def cp(a):
+            return a.at[:, dst].set(a[:, src])
+
+        self.cache = {name: ({leaf: cp(arr) for leaf, arr in sub.items()}
+                             if "k_pages" in sub else sub)
+                      for name, sub in self.cache.items()}
 
     def retire(self):
         """Drop the cache and params so a retired engine's stale worker

@@ -182,6 +182,33 @@ def test_metrics_deferred_admission_counts_queue_steps(granite):
     assert r.metrics.ttft_steps == 4
 
 
+def test_step_output_counts_prefill_tokens(granite):
+    """StepOutput.prefill_tokens reports the prompt rows computed this
+    step: the whole prompt for monolithic engines, chunk-bounded (and
+    shrunk by prefix-cache hits) otherwise."""
+    cfg, params = granite
+    eng = Engine(cfg, [params], max_batch=2, max_seq=64)
+    eng.submit(PROMPT, SamplingParams(max_new=2))
+    eng.submit([3, 1, 4], SamplingParams(max_new=2))
+    first = eng.step()
+    assert first.prefill_tokens == len(PROMPT) + 3
+    assert eng.step().prefill_tokens == 0
+
+    chunked = Engine(cfg, [params], max_batch=2, max_seq=64, paged=True,
+                     block_size=4, prefix_cache=True, prefill_chunk=4)
+    r = chunked.submit(list(range(10)), SamplingParams(max_new=2))
+    outs = chunked.run()
+    assert [o.prefill_tokens for o in outs[:3]] == [4, 4, 2]
+    assert r.metrics.cached_tokens == 0          # cold cache
+    # identical prompt: the two full prefix blocks are reused, only the
+    # partial-block suffix is recomputed
+    r2 = chunked.submit(list(range(10)), SamplingParams(max_new=2))
+    outs = chunked.run()
+    assert outs[0].prefill_tokens == 2
+    assert r2.metrics.cached_tokens == 8
+    assert r2.generated == r.generated
+
+
 # ------------------------------------------------------------- lifecycle
 def test_retired_source_engine_raises(granite):
     """Satellite: after the endpoint swaps engines, the old engine must
