@@ -1,10 +1,16 @@
 """Engine micro-benchmark: prefill latency and decode throughput of the
 real JAX serving engine on the reduced CPU config — contiguous vs paged
 KV layout, plus the paged engine's prefix cache (shared-prefix workload:
-prefill-FLOP and pool-occupancy win) and chunked prefill (mixed
+prefill-FLOP and pool-occupancy win), chunked prefill (mixed
 prefill+decode steps bounding per-step latency while a long prompt
-prefills). Writes ``BENCH_engine.json`` (path overridable via argv[1])
-so the perf trajectory is tracked across PRs.
+prefills), and the scheduler policies under an *overload* workload
+(arrival burst beyond the endpoint's slot capacity, mixed
+priorities/SLOs): per-policy TTFT-SLO attainment shows FCFS head-of-line
+blocking starving tight-deadline requests while the priority and
+SLO-deadline (EDF) policies reorder — and preempt background residents,
+resuming them through the prefix cache — to hit their budgets. Writes
+``BENCH_engine.json`` (path overridable via argv[1]) so the perf
+trajectory is tracked across PRs.
 
     PYTHONPATH=src python benchmarks/bench_engine.py [out.json]
 """
@@ -18,6 +24,7 @@ import time
 import jax
 
 from repro.configs import get_config, smoke_variant
+from repro.core.types import SLO
 from repro.models import build_model
 from repro.serving.api import SamplingParams
 from repro.serving.endpoint import ServingEndpoint
@@ -31,6 +38,7 @@ SHARED_LEN = 32          # system-prompt prefix shared by every request
 TAIL_LEN = 8
 LONG_PROMPT = 64
 CHUNK = 8
+POLICIES = ("fcfs", "priority", "slo")
 
 
 def bench_layout(cfg, params, paged: bool) -> dict:
@@ -132,17 +140,59 @@ def bench_chunked_prefill(cfg, params, chunk) -> dict:
     }
 
 
+def bench_overload(cfg, params, policy: str) -> dict:
+    """Overload burst: two loose-SLO background requests saturate both
+    slots, then three tight-TTFT interactive requests arrive at once —
+    more work than the endpoint can hold. FCFS serves in arrival order
+    (interactive TTFTs blow their budgets behind the long decodes);
+    priority/EDF admit the urgent requests first, preempting background
+    residents whose blocks are released but whose committed prefix stays
+    cached, so the resumes re-prefill only their tails."""
+    eng = Engine(cfg, [params], max_batch=2, max_seq=96, block_size=BLOCK,
+                 paged=True, prefix_cache=True, policy=policy)
+    background = [
+        eng.submit([10 + i] * 24,
+                   SamplingParams(max_new=24, priority=0,
+                                  slo=SLO(ttft=200.0, tpot=60.0)))
+        for i in range(2)]
+    for _ in range(3):                    # background is warm and decoding
+        eng.step()
+    interactive = [
+        eng.submit([50 + i] * 4,
+                   SamplingParams(max_new=4, priority=2,
+                                  slo=SLO(ttft=6.0, tpot=30.0)))
+        for i in range(3)]
+    eng.run()
+    reqs = background + interactive
+    attained = [r.metrics.ttft_steps is not None
+                and r.metrics.ttft_steps <= r.params.slo.ttft for r in reqs]
+    resumed_cached = sum(r.metrics.cached_tokens for r in reqs
+                         if r.metrics.preemptions)
+    return {
+        "workload": "overload-burst",
+        "policy": policy,
+        "n_background": len(background),
+        "n_interactive": len(interactive),
+        "ttft_slo_attainment": sum(attained) / len(reqs),
+        "interactive_ttft_steps": [r.metrics.ttft_steps
+                                   for r in interactive],
+        "preemptions": eng.scheduler.n_preemptions,
+        "resumed_cached_tokens": resumed_cached,
+    }
+
+
 def main(out_path: str = "BENCH_engine.json"):
     cfg = smoke_variant(get_config("granite-3-8b"))
     params = build_model(cfg).init(jax.random.PRNGKey(0))
     results = [bench_layout(cfg, params, paged) for paged in (False, True)]
     prefix = [bench_prefix_sharing(cfg, params, pc) for pc in (False, True)]
     chunked = [bench_chunked_prefill(cfg, params, c) for c in (None, CHUNK)]
+    overload = [bench_overload(cfg, params, pol) for pol in POLICIES]
     report = {
         "bench": "engine-smoke",
         "model": cfg.name,
         "device": jax.devices()[0].platform,
-        "results": results + prefix + chunked,
+        "results": results + prefix + chunked + overload,
     }
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
@@ -165,6 +215,15 @@ def main(out_path: str = "BENCH_engine.json"):
               f"{r['prefill_steps']} steps ({r['mixed_steps']} mixed), "
               f"max step {r['max_step_ms_during_prefill']:.1f}ms, "
               f"ttft {r['long_ttft_steps']} steps")
+    for r in overload:
+        print(f"{r['policy']:>10}: TTFT-SLO attainment "
+              f"{r['ttft_slo_attainment']:.2f}, interactive ttft "
+              f"{r['interactive_ttft_steps']} steps, "
+              f"{r['preemptions']} preemptions "
+              f"({r['resumed_cached_tokens']} resumed tokens from cache)")
+    by_pol = {r["policy"]: r["ttft_slo_attainment"] for r in overload}
+    assert by_pol["slo"] > by_pol["fcfs"], \
+        "SLO-deadline policy must beat FCFS on the bursty workload"
     print(f"wrote {out_path}")
 
 

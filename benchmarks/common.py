@@ -7,7 +7,8 @@ import sys
 import time
 
 from repro.core.types import GB, Gbps, ModelProfile, ServerSpec, SLO
-from repro.workloads.applications import APPLICATIONS, WARM, timings_for
+from repro.workloads.applications import (APPLICATIONS, WARM, kv_bytes_for,
+                                          timings_for)
 
 
 def testbed_i():
@@ -30,7 +31,8 @@ def testbed_ii():
 
 def profiles():
     return {name: ModelProfile(name, w.size_bytes, timings_for(name),
-                               SLO(7.5, 0.2))
+                               SLO(7.5, 0.2),
+                               kv_bytes_per_token=kv_bytes_for(name))
             for name, w in WARM.items()}
 
 

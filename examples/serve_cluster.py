@@ -9,7 +9,8 @@ import argparse
 
 from repro.core.types import GB, Gbps, ModelProfile, ServerSpec, SLO
 from repro.serving.simulation import ServerlessSim
-from repro.workloads.applications import APPLICATIONS, WARM, timings_for
+from repro.workloads.applications import (APPLICATIONS, WARM,
+                                          kv_bytes_for, timings_for)
 from repro.workloads.generator import generate, make_instances
 
 
@@ -30,7 +31,9 @@ def main():
     args = ap.parse_args()
 
     profiles = {n: ModelProfile(n, w.size_bytes, timings_for(n),
-                                SLO(7.5, 0.2)) for n, w in WARM.items()}
+                                SLO(7.5, 0.2),
+                                kv_bytes_per_token=kv_bytes_for(n))
+                for n, w in WARM.items()}
     print(f"{'system':16s} {'n':>5s} {'ttft_att':>9s} {'tpot_att':>9s} "
           f"{'mean_ttft':>10s} {'p99':>7s} {'colds':>6s}")
     for system in ("vllm", "serverlessllm", "hydra"):

@@ -34,7 +34,7 @@ reqs = {
                                         stop_tokens=(probe[3],))),
 }
 stop_at = probe.index(probe[3])          # stop fires at first occurrence
-while ep.active() or ep.engine.queue:
+while ep.has_work():
     out = ep.step()
     for ev in out.events:
         fin = f"  <- {ev.finish_reason.value}" if ev.finish_reason else ""

@@ -5,8 +5,8 @@ Used by both the discrete-event serving simulation and the real JAX engine.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Callable, Dict, Optional
+import dataclasses
+from typing import Dict, Optional
 
 from repro.core.consolidation import (ConsolidationPolicy,
                                       SlidingWindowPredictor)
@@ -44,7 +44,6 @@ class CentralController:
             free_hbm = {sid: s.hbm_bytes for sid, s in self.servers.items()}
         model = self.models[model_name]
         if self.max_pp_cap is not None:
-            import dataclasses
             model = dataclasses.replace(
                 model, max_pp=min(model.max_pp, self.max_pp_cap))
         eff = self.tracker.effective_bandwidths(now)

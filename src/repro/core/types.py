@@ -81,6 +81,16 @@ class ModelProfile:
     max_pp: int = 4
     # HBM a *warm, non-parallelized* worker reserves (weights + KV + runtime)
     full_hbm_bytes: Optional[int] = None
+    # per-token KV footprint (all layers); None = geometry unknown, callers
+    # fall back to their own default (see kv_bytes_from_geometry)
+    kv_bytes_per_token: Optional[int] = None
+
+    @staticmethod
+    def kv_bytes_from_geometry(n_attn_layers: int, n_kv_heads: int,
+                               head_dim: int, dtype_bytes: int = 2) -> int:
+        """KV bytes one token pins across the whole model: K and V, every
+        attention layer — 2 * layers * kv_heads * head_dim * dtype."""
+        return 2 * n_attn_layers * n_kv_heads * head_dim * dtype_bytes
 
     def hbm_full(self) -> int:
         if self.full_hbm_bytes is not None:

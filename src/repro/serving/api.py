@@ -23,6 +23,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.types import SLO
+
 
 class FinishReason(str, enum.Enum):
     LENGTH = "length"            # hit SamplingParams.max_new
@@ -33,13 +35,24 @@ class FinishReason(str, enum.Enum):
 @dataclass(frozen=True)
 class SamplingParams:
     """Decode policy for one request. The default is greedy argmax with
-    length-only termination — the legacy engine behaviour, bit-exact."""
+    length-only termination — the legacy engine behaviour, bit-exact.
+
+    ``priority`` and ``slo`` are *scheduling* hints, consumed by the
+    engine's ``SchedulingPolicy`` (serving/scheduler.py): priority is an
+    integer where larger means more important (the priority policy admits
+    high before low and may preempt low for high); ``slo`` carries
+    per-request TTFT/TPOT budgets, interpreted in **scheduler steps** by
+    the SLO-deadline (EDF) policy. Both are ignored by the default FCFS
+    policy, so plain requests behave exactly as before.
+    """
     max_new: int = 16
     temperature: float = 0.0     # <= 0 means greedy argmax
     top_k: int = 0               # 0 means the full vocab
     seed: int = 0                # PRNG seed for temperature > 0
     eos_token: Optional[int] = None
     stop_tokens: Tuple[int, ...] = ()
+    priority: int = 0            # scheduling priority (higher wins)
+    slo: Optional[SLO] = None    # TTFT/TPOT budgets in scheduler steps
 
     def __post_init__(self):
         if self.max_new < 1:
@@ -62,7 +75,11 @@ class RequestMetrics:
     ``tpot_steps`` is the decode-steps-per-generated-token proxy (1.0
     when the request decoded every step it was resident);
     ``cached_tokens`` is the prompt prefix served from the paged prefix
-    cache — tokens whose KV was reused instead of recomputed.
+    cache — tokens whose KV was reused instead of recomputed (on a
+    preempted request it is refreshed at re-admission, so it also shows
+    how much of the resume was served from the retained prefix blocks);
+    ``preemptions`` counts how many times the scheduler evicted this
+    request from its slot to make room for higher-value work.
     """
     submit_step: int = 0
     admit_step: Optional[int] = None      # step of the first token
@@ -70,6 +87,8 @@ class RequestMetrics:
     decode_steps: int = 0                 # decode passes it took part in
     n_tokens: int = 0                     # tokens emitted so far
     cached_tokens: int = 0                # prompt tokens hit in prefix cache
+    preemptions: int = 0                  # times evicted from a slot
+    last_token_step: Optional[int] = None  # step of the latest token
 
     @property
     def ttft_steps(self) -> Optional[int]:
@@ -105,13 +124,17 @@ class StepOutput:
     decode token per resident request (slot order). Under chunked prefill
     a step can make prefill progress without emitting a prefill token —
     ``prefill_tokens`` counts the prompt tokens computed this step, so a
-    mixed step shows both ``prefill_tokens > 0`` and decode events."""
+    mixed step shows both ``prefill_tokens > 0`` and decode events.
+    ``preempted`` lists the requests the scheduler evicted this step;
+    they re-enter the admission queue and resume later (no events are
+    emitted for a preemption — the stream just pauses)."""
     step: int
     events: Tuple[TokenEvent, ...]
     finished: Tuple[int, ...]             # rids that finished this step
     num_active: int                       # residents after the step
-    num_queued: int                       # still waiting for admission
+    num_queued: int                       # waiting + preempted, pre-admission
     prefill_tokens: int = 0               # prompt tokens prefilled this step
+    preempted: Tuple[int, ...] = ()       # rids preempted this step
 
 
 @dataclass(frozen=True)

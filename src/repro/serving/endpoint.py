@@ -53,6 +53,11 @@ class ServingEndpoint:
         return self._engine.paged
 
     @property
+    def policy(self):
+        """The live engine's ``SchedulingPolicy`` (survives swaps)."""
+        return self._engine.policy
+
+    @property
     def n_stages(self) -> int:
         return len(self._engine.workers)
 
@@ -66,6 +71,11 @@ class ServingEndpoint:
 
     def active(self) -> List[GenRequest]:
         return self._engine.active()
+
+    def has_work(self) -> bool:
+        """True while any request is resident, waiting, or preempted —
+        use this (not ``active() or queue``) to drive a step loop."""
+        return self._engine.has_work()
 
     def submit(self, prompt: Sequence[int],
                params: Union[SamplingParams, int, None] = None, *,
@@ -92,7 +102,10 @@ class ServingEndpoint:
     def consolidate(self, full_params: dict) -> "ServingEndpoint":
         """§6.2 scale-down behind the handle: gather KV/state onto one
         standalone worker, swap it in, retire the pipeline-group engine.
-        In-flight requests (and ``last_migration_bytes``) carry over."""
+        In-flight requests (and ``last_migration_bytes``) carry over, and
+        so do the scheduling policy and the waiting/preempted pools — a
+        consolidation changes the endpoint's capacity, not its scheduling
+        behaviour."""
         src = self._engine
         self._engine = src.consolidated(full_params)
         src.retire()
@@ -142,11 +155,14 @@ class ServerlessFrontend:
                    max_batch: int = 4, max_seq: int = 128,
                    paged: Optional[bool] = None,
                    prefix_cache: bool = False,
-                   prefill_chunk: Optional[int] = None) -> ServingEndpoint:
+                   prefill_chunk: Optional[int] = None,
+                   policy: str = "fcfs") -> ServingEndpoint:
         """Alg. 1 cold start: pick a pipeline scheme, slice each stage's
         parameters, and return a live endpoint (its ``scheme`` attribute
-        records the plan). ``prefix_cache``/``prefill_chunk`` pass through
-        to the engine (paged layout only) and survive consolidation."""
+        records the plan). ``prefix_cache``/``prefill_chunk``/``policy``
+        pass through to the engine (the first two need the paged layout)
+        and survive consolidation — a pipeline group that consolidates
+        mid-flight keeps scheduling by the same rules."""
         dep = self._deployed[name]
         scheme = self.controller.plan_cold_start(name, free_hbm, now,
                                                  force_s=force_s)
@@ -155,7 +171,8 @@ class ServerlessFrontend:
                         for i in range(n_stages)]
         eng = Engine(dep.cfg, stage_params, max_batch=max_batch,
                      max_seq=max_seq, paged=paged,
-                     prefix_cache=prefix_cache, prefill_chunk=prefill_chunk)
+                     prefix_cache=prefix_cache, prefill_chunk=prefill_chunk,
+                     policy=policy)
         return ServingEndpoint(eng, scheme=scheme)
 
     def full_params(self, name: str) -> dict:

@@ -8,13 +8,40 @@ returns a request handle, every ``step()`` returns a ``StepOutput`` whose
 ``FinishReason`` (length / eos / stop_token) and carry ``RequestMetrics``
 in scheduler steps.
 
+Since the scheduler/runner split the Engine itself is thin — a
+composition of two layers it drives each step:
+
+  * ``Scheduler`` (serving/scheduler.py) owns the waiting / running /
+    preempted queues and all policy decisions (admission order, prefill
+    token-budget assignment, preemption victims) behind a pluggable
+    ``SchedulingPolicy`` — ``fcfs`` (default, bit-exact with the
+    pre-split engine), ``priority``, or ``slo`` (EDF over per-request
+    TTFT/TPOT step budgets). Each step it emits explicit
+    ``ScheduleBatch`` plans.
+  * ``ModelRunner`` (serving/runner.py) purely executes those plans
+    against the ``StageWorker`` pipeline and returns logits; it also
+    keeps the paged block table incrementally current instead of
+    rebuilding it every forward.
+
+The Engine applies sampling, finish semantics, and block-accounting
+side effects, and keeps the public ``submit/step/run/generate`` surface.
+
+Under slot or block-pool pressure a non-FCFS policy *preempts* the
+lowest-value resident instead of deferring the queue forever: the
+victim's blocks are released (``BlockManager.release_for_preempt``) but
+its committed prefix stays in the hash index, so — with the prefix cache
+on — its later re-admission re-prefills only the uncached tail and the
+token stream continues bit-exactly. ``preempt(req)`` forces the same
+mechanics regardless of policy (tests, §6.2 capacity changes).
+
 Most callers should not hold an Engine directly: ``ServingEndpoint``
 (serving/endpoint.py) is the stable handle that swaps engines in place
 across §6.2 consolidation / scale-up. ``consolidated()`` / ``scale_up()``
 remain on the engine for callers that need the raw object (bit-exactness
 tests), but the endpoint additionally *retires* the source engine so a
 stale reference raises instead of silently corrupting the block tables it
-no longer owns.
+no longer owns. The scheduling policy and the whole request population
+(running, waiting, preempted) survive the swap.
 
 KV layouts (``paged`` flag, default from ``ops.decode_mode()``):
   * contiguous — per-slot (B, Smax) caches, the seed behaviour.
@@ -25,12 +52,12 @@ KV layouts (``paged`` flag, default from ``ops.decode_mode()``):
     consolidation gathers exactly the live blocks.
 
 Paged engines additionally support (attention-only decoder models):
-  * ``prefix_cache=True`` — admission matches each prompt against the
-    BlockManager's content-addressed prefix index and prefills only the
-    suffix; shared blocks are reference-counted, a fully-cached prompt
-    copies its last block on write, and finished requests' blocks stay
-    cached (LRU-evicted before admission ever defers). Greedy outputs
-    are bit-exact with the uncached engine.
+  * ``prefix_cache=True`` — admission matches each request's token chain
+    against the BlockManager's content-addressed prefix index and
+    prefills only the suffix; shared blocks are reference-counted, a
+    fully-cached prompt copies its last block on write, and finished or
+    preempted requests' blocks stay cached (LRU-evicted before admission
+    ever defers). Greedy outputs are bit-exact with the uncached engine.
   * ``prefill_chunk=N`` — prefill runs in chunks of at most N tokens per
     step, interleaved with decode (*mixed steps*): a long prompt no
     longer stalls in-flight decodes for a whole forward, so one
@@ -40,68 +67,26 @@ Paged engines additionally support (attention-only decoder models):
 
 from __future__ import annotations
 
-import collections
-import dataclasses
 import itertools
 import math
-from dataclasses import dataclass, field
 from typing import Iterator, List, Optional, Sequence, Union
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.kernels import ops
 from repro.models.model import Model
-from repro.serving.api import (FinishReason, RequestMetrics, RequestOutput,
-                               SamplingParams, StepOutput, TokenEvent,
-                               sample_token)
+from repro.serving.api import (FinishReason, SamplingParams, StepOutput,
+                               TokenEvent, sample_token)
 from repro.serving.kvcache import BlockManager
 from repro.serving.migration import (gather_stage_caches,
                                      gather_stage_caches_with_bytes)
-from repro.serving.worker import StageWorker
+from repro.serving.runner import ModelRunner
+from repro.serving.scheduler import (GenRequest, PrefillAssignment,
+                                     Scheduler, SchedulingPolicy)
 
-
-@dataclass
-class GenRequest:
-    """Opaque per-request handle returned by ``submit`` — callers read
-    ``generated``/``done``/``finish_reason``/``metrics`` and call
-    ``output()``; everything else is engine-internal."""
-    rid: int
-    prompt: List[int]
-    params: SamplingParams
-    prefix_embeds: Optional[np.ndarray] = None
-    generated: List[int] = field(default_factory=list)
-    slot: Optional[int] = None
-    done: bool = False
-    finish_reason: Optional[FinishReason] = None
-    metrics: RequestMetrics = field(default_factory=RequestMetrics)
-    prefilled: int = 0          # prompt rows with KV computed (incl. cached)
-
-    @property
-    def max_new(self) -> int:
-        return self.params.max_new
-
-    @property
-    def prompt_total(self) -> int:
-        """Prompt tokens incl. any prefix embeddings."""
-        return len(self.prompt) + (0 if self.prefix_embeds is None
-                                   else self.prefix_embeds.shape[0])
-
-    @property
-    def prefill_done(self) -> bool:
-        return self.prefilled >= self.prompt_total
-
-    @property
-    def pos_next(self) -> int:
-        """Cache position of the next token to feed."""
-        return self.prompt_total + len(self.generated) - 1
-
-    def output(self) -> RequestOutput:
-        return RequestOutput(self.rid, tuple(self.prompt),
-                             tuple(self.generated), self.finish_reason,
-                             dataclasses.replace(self.metrics))
+__all__ = ["Engine", "GenRequest"]
 
 
 class Engine:
@@ -109,7 +94,8 @@ class Engine:
                  max_batch: int = 4, max_seq: int = 128,
                  block_size: int = 16, paged: Optional[bool] = None,
                  prefix_cache: bool = False,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 policy: Union[str, SchedulingPolicy] = "fcfs"):
         self.cfg = cfg
         self.model = Model(cfg)
         if paged is None:
@@ -136,25 +122,46 @@ class Engine:
         self.block_mgr = BlockManager(
             n_blocks=n_blocks, block_size=block_size,
             bytes_per_token=max(kv_per_tok, 1), prefix_cache=prefix_cache)
-        # one extra trash page: idle slots' block-table rows point here so
-        # their (unused) decode writes never land in a live page
-        self._null_page = n_blocks
-        self._table_width = max_seq // block_size + 1
-        n = len(stage_params)
-        self.workers = [StageWorker(cfg, p, n, i, max_batch, max_seq,
-                                    paged=paged, n_pages=n_blocks + 1,
-                                    page_size=block_size)
-                        for i, p in enumerate(stage_params)]
-        self.slots: List[Optional[GenRequest]] = [None] * max_batch
-        self.queue: collections.deque = collections.deque()
+        self.scheduler = Scheduler(self.block_mgr, max_batch, policy,
+                                   prefix_cache=prefix_cache)
+        self.runner = ModelRunner(cfg, stage_params, max_batch, max_seq,
+                                  paged=paged, n_blocks=n_blocks,
+                                  block_size=block_size)
         self._rid = itertools.count()
         self.finished: List[GenRequest] = []
         self.steps = 0
         self.retired = False
         self.last_migration_bytes: Optional[int] = None
-        # per-step prefill token budget (set by step())
-        self._prefill_budget: float = math.inf
         self._step_prefill_tokens: int = 0
+
+    # ------------------------------------------------------- delegation
+    @property
+    def policy(self) -> SchedulingPolicy:
+        return self.scheduler.policy
+
+    @property
+    def workers(self):
+        return self.runner.workers
+
+    @property
+    def queue(self):
+        """The waiting (never-admitted) pool; preempted requests live in
+        ``scheduler.preempted``."""
+        return self.scheduler.waiting
+
+    @property
+    def slots(self):
+        return self.scheduler.slots
+
+    def active(self) -> List[GenRequest]:
+        return self.scheduler.running()
+
+    def has_work(self) -> bool:
+        """True while any request is resident, waiting, OR preempted —
+        the condition drive-your-own-step loops should poll. (Checking
+        ``active() or queue`` misses the preempted pool: a preempted
+        request is in neither until it is re-admitted.)"""
+        return self.scheduler.has_work()
 
     def _check_live(self):
         if self.retired:
@@ -185,132 +192,10 @@ class Engine:
                 f"request needs {req.prompt_total + params.max_new} cache "
                 f"slots (prompt {req.prompt_total} + max_new "
                 f"{params.max_new}) > max_seq={self.max_seq}")
-        self.queue.append(req)
+        self.scheduler.submit(req)
         return req
 
-    # -------------------------------------------------------------- admit
-    def _free_slots(self) -> List[int]:
-        return [i for i, s in enumerate(self.slots) if s is None]
-
-    def _can_admit(self, req: GenRequest) -> bool:
-        """Admission control, one authoritative BlockManager check: the
-        pool must cover this request's worst-case total (prompt + decode
-        tail — which subsumes the prompt itself) on top of the worst-case
-        tails already reserved by in-flight requests, so ``extend`` can
-        never fail mid-flight. (submit() already bounds every request to
-        max_seq total tokens.) Deliberately conservative under the prefix
-        cache: a hit only means *fewer* fresh blocks are taken."""
-        bm = self.block_mgr
-        reserved = 0
-        for r in self.active():
-            held = len(bm.tables[r.rid].blocks)
-            reserved += max(0, bm.blocks_needed(r.prompt_total + r.max_new)
-                            - held)
-        need = bm.blocks_needed(req.prompt_total + req.max_new)
-        return bm.free_blocks - reserved >= need
-
-    def _admit(self, events: List[TokenEvent]):
-        """Admit from the queue head while slots, blocks, and the step's
-        prefill budget allow. A request whose prefill token already
-        satisfies its finish condition (max_new=1, eos, stop token)
-        finishes here and frees its slot immediately — it never occupies
-        a decode step."""
-        while self.queue and self._prefill_budget > 0:
-            free = self._free_slots()
-            if not free:
-                break
-            if not self._can_admit(self.queue[0]):
-                break                     # defer until blocks free up
-            req = self.queue.popleft()
-            req.slot = free[0]
-            self.slots[req.slot] = req
-            self._allocate(req)
-            self._prefill_progress(req, events)
-
-    def _allocate(self, req: GenRequest):
-        """Build the request's block table. With the prefix cache on, the
-        prompt's token chain is matched against the index: the shared
-        blocks need no prefill compute (``prefilled`` starts past them)
-        and any copy-on-write of a fully-cached prompt's last block is
-        applied to the worker pools right here, before anything reads or
-        evicts the source page."""
-        tokens = None
-        if self.prefix_cache and req.prefix_embeds is None:
-            # prefix embeddings are not part of the token chain — those
-            # requests prefill from scratch
-            tokens = req.prompt
-        table = self.block_mgr.allocate(req.rid, req.prompt_total,
-                                        tokens=tokens)
-        req.prefilled = table.cached_tokens
-        req.metrics.cached_tokens = table.cached_tokens
-        for src, dst in self.block_mgr.drain_copies():
-            for w in self.workers:
-                w.copy_pages(src, dst)
-
-    def _block_tables(self, decode: bool = False) -> jnp.ndarray:
-        """(B, nb) int32 page ids from the BlockManager; idle slots (and
-        tails past a request's live blocks) point at the null page. For
-        ``decode``, half-prefilled slots are nulled too: they take no part
-        in the decode batch and their dummy writes must not land in live
-        (possibly shared) pages."""
-        bt = np.full((self.max_batch, self._table_width), self._null_page,
-                     np.int32)
-        for r in self.active():
-            if decode and not r.prefill_done:
-                continue
-            blocks = self.block_mgr.tables[r.rid].blocks
-            bt[r.slot, :len(blocks)] = blocks
-        return jnp.asarray(bt)
-
-    def _prefill_progress(self, req: GenRequest, events: List[TokenEvent]):
-        """Advance this request's prefill within the step's token budget.
-        Monolithic engines (prefill_chunk=None) run the whole remainder in
-        one forward; chunked engines stop at the budget and resume next
-        step. Emits the first token when the prompt completes."""
-        while not req.prefill_done and self._prefill_budget > 0:
-            n = req.prompt_total - req.prefilled
-            if req.prefix_embeds is None:
-                n = min(n, self._prefill_budget)
-            # prefix-embed prompts prefill monolithically (their embeds
-            # are not re-sliceable per chunk); they still charge the
-            # budget so co-resident prefills stay bounded
-            self._prefill_chunk(req, n, events)
-            self._prefill_budget -= n
-            self._step_prefill_tokens += n
-
-    def _prefill_chunk(self, req: GenRequest, n: int,
-                       events: List[TokenEvent]):
-        """One prefill forward over the next ``n`` prompt rows."""
-        start = req.prefilled
-        prefix = None
-        if req.prefix_embeds is not None:
-            assert start == 0 and n == req.prompt_total
-            prefix = jnp.asarray(req.prefix_embeds)[None]
-            tok = req.prompt
-        else:
-            tok = req.prompt[start:start + n]
-        h = jnp.asarray([tok], jnp.int32)
-        positions = jnp.arange(start, start + n, dtype=jnp.int32)[None]
-        bt = None
-        if self.paged:
-            bt = self._block_tables()[req.slot:req.slot + 1]
-        for w in self.workers:
-            h = w.prefill_slot(h, req.slot, positions, prefix_embeds=prefix,
-                               block_tables=bt, hist_len=start)
-        req.prefilled = start + n
-        self.block_mgr.commit(req.rid, req.prefilled)
-        if req.prefill_done:
-            req.metrics.admit_step = self.steps
-            first = sample_token(h[0, 0], req.params, 0)
-            reason = self._emit(req, first, events)
-            self.block_mgr.extend(req.rid, token=first)
-            if reason is not None:
-                self._finish(req, reason)
-
     # -------------------------------------------------------------- step
-    def active(self) -> List[GenRequest]:
-        return [r for r in self.slots if r is not None]
-
     def _finish_reason(self, req: GenRequest,
                        token: int) -> Optional[FinishReason]:
         sp = req.params
@@ -326,44 +211,100 @@ class Engine:
               events: List[TokenEvent]) -> Optional[FinishReason]:
         req.generated.append(token)
         req.metrics.n_tokens = len(req.generated)
+        req.metrics.last_token_step = self.steps
         reason = self._finish_reason(req, token)
         events.append(TokenEvent(req.rid, token, reason))
         return reason
 
+    def _extend(self, req: GenRequest, token: int):
+        """Grow the request's block table by one row (the token just fed
+        or about to be fed) and mirror any new block into the runner's
+        cached table row."""
+        t = self.block_mgr.tables[req.rid]
+        held = len(t.blocks)
+        self.block_mgr.extend(req.rid, token=token)
+        if len(t.blocks) != held:
+            self.runner.set_row(req.slot, t.blocks)
+
+    def _apply_copies(self):
+        """Apply prefix-cache COW page copies queued by the scheduler's
+        allocations to the worker pools — before anything reads (or a
+        later allocation evicts) the released source pages."""
+        for src, dst in self.block_mgr.drain_copies():
+            self.runner.copy_pages(src, dst)
+
+    def _exec_prefill(self, pa: PrefillAssignment,
+                      events: List[TokenEvent]):
+        """Run one planned prefill forward and apply its lifecycle
+        effects. A fresh request that completes its prompt emits its
+        first token here (and may finish outright — max_new=1, eos); a
+        *resumed* request re-materializes KV for tokens it already
+        emitted, so its final logits are discarded and decode simply
+        restarts from the last emitted token."""
+        req = pa.req
+        if req.prefix_embeds is not None:
+            assert pa.start == 0 and pa.n == req.prompt_total
+            tok = req.prompt
+        else:
+            tok = req.chain()[pa.start:pa.start + pa.n]
+        h = self.runner.prefill(req.slot, tok, pa.start, pa.n,
+                                prefix_embeds=req.prefix_embeds)
+        req.prefilled = pa.start + pa.n
+        self._step_prefill_tokens += pa.n
+        self.block_mgr.commit(req.rid, req.prefilled)
+        if not req.prefill_done:
+            return
+        if not req.generated:             # first admission: emit token 0
+            req.metrics.admit_step = self.steps
+            first = sample_token(h[0, 0], req.params, 0)
+            reason = self._emit(req, first, events)
+            self._extend(req, first)
+            if reason is not None:
+                self._finish(req, reason)
+        else:                             # resume: decode re-feeds the tail
+            self._extend(req, req.generated[-1])
+
     def step(self) -> StepOutput:
-        """One scheduler iteration: resume half-prefilled residents, admit
-        from the queue, then one decode for every fully-prefilled slot —
-        a *mixed* step when chunked prefill and decode coexist. Returns
-        the step's newly emitted token events (streaming)."""
+        """One scheduler iteration: ask the Scheduler for ScheduleBatch
+        plans (half-prefilled residents resume, then policy-ordered
+        admissions, preempting on pressure where the policy allows) and
+        execute them until the plan is idle — a request finishing at
+        prefill frees its slot for a same-step admission — then one
+        batched decode over the final plan's decode set. A *mixed* step
+        is one where chunked prefill and decode coexist. Returns the
+        step's newly emitted token events (streaming)."""
         self._check_live()
         self.steps += 1
         events: List[TokenEvent] = []
         n_done = len(self.finished)
-        self._prefill_budget = (math.inf if self.prefill_chunk is None
-                                else self.prefill_chunk)
         self._step_prefill_tokens = 0
-        # residents first (admission order), then the queue: a long prompt
-        # mid-prefill keeps priority over newly arriving requests
-        for r in sorted(self.active(), key=lambda r: r.rid):
-            if not r.prefill_done:
-                self._prefill_progress(r, events)
-        self._admit(events)
-        reqs = [r for r in self.active() if r.prefill_done]
+        sched = self.scheduler
+        sched.begin_step(self.steps,
+                         math.inf if self.prefill_chunk is None
+                         else self.prefill_chunk)
+        preempted_rids: List[int] = []
+        while True:
+            plan = sched.schedule()
+            for req, slot in plan.preempted:
+                preempted_rids.append(req.rid)
+                self.runner.clear_row(slot)
+                self.runner.clear_slot(slot)
+            for req in plan.admitted:
+                self.runner.set_row(req.slot,
+                                    self.block_mgr.tables[req.rid].blocks)
+            self._apply_copies()
+            for pa in plan.prefills:
+                self._exec_prefill(pa, events)
+            if plan.idle:
+                break
+        reqs = list(plan.decodes)
         if reqs:
-            tokens = np.zeros((self.max_batch, 1), np.int32)
-            positions = np.zeros((self.max_batch, 1), np.int32)
-            for r in reqs:
-                tokens[r.slot, 0] = r.generated[-1]
-                positions[r.slot, 0] = r.pos_next
-            h = jnp.asarray(tokens)
-            pos = jnp.asarray(positions)
-            bt = self._block_tables(decode=True) if self.paged else None
-            for w in self.workers:
-                h = w.decode(h, pos, block_tables=bt)
+            skip = [r.slot for r in sched.running() if not r.prefill_done]
+            h = self.runner.decode(reqs, skip_slots=skip)
             greedy = None
             if any(r.params.greedy for r in reqs):
                 greedy = np.asarray(jnp.argmax(h[:, 0], axis=-1))
-            for r in list(reqs):
+            for r in reqs:
                 if r.params.greedy:
                     nxt = int(greedy[r.slot])
                 else:
@@ -374,28 +315,40 @@ class Engine:
                 # the fed token's KV is now material through pos_next + 1
                 self.block_mgr.commit(
                     r.rid, r.prompt_total + len(r.generated) - 1)
-                self.block_mgr.extend(r.rid, token=nxt)
+                self._extend(r, nxt)
                 if reason is not None:
                     self._finish(r, reason)
         return StepOutput(self.steps, tuple(events),
                           tuple(r.rid for r in self.finished[n_done:]),
-                          len(self.active()), len(self.queue),
-                          prefill_tokens=self._step_prefill_tokens)
+                          len(self.active()), sched.num_queued(),
+                          prefill_tokens=self._step_prefill_tokens,
+                          preempted=tuple(preempted_rids))
 
     def _finish(self, req: GenRequest, reason: FinishReason):
+        slot = req.slot
         req.done = True
         req.finish_reason = reason
         req.metrics.finish_step = self.steps
-        self.slots[req.slot] = None
-        self.block_mgr.free(req.rid)
-        for w in self.workers:
-            w.clear_slot(req.slot)
+        self.scheduler.release(req)
+        self.runner.clear_row(slot)
+        self.runner.clear_slot(slot)
         self.finished.append(req)
+
+    def preempt(self, req: GenRequest):
+        """Forcibly evict a running request regardless of policy — the
+        same mechanics a pressure-driven preemption uses. Its blocks are
+        released (committed prefix stays cached under ``prefix_cache``),
+        it rejoins the admission queue, and its token stream continues
+        bit-exactly after re-admission."""
+        self._check_live()
+        slot = self.scheduler.force_preempt(req)
+        self.runner.clear_row(slot)
+        self.runner.clear_slot(slot)
 
     def run(self, max_steps: int = 10_000) -> List[StepOutput]:
         self._check_live()
         outs = []
-        while (self.queue or self.active()) and max_steps:
+        while self.has_work() and max_steps:
             outs.append(self.step())
             max_steps -= 1
         return outs
@@ -432,7 +385,8 @@ class Engine:
         every stage except the surviving target (worker 0) — i.e. the
         `n_layers` the BlockManager's migration_bytes quote refers to."""
         per_period = sum(1 for m in self.cfg.mixer_pattern if m == "attn")
-        workers = self.workers[1:] if migrated_only else self.workers
+        workers = self.runner.workers[1:] if migrated_only \
+            else self.runner.workers
         return per_period * sum(p1 - p0 for p0, p1 in
                                 (w.periods for w in workers))
 
@@ -445,13 +399,16 @@ class Engine:
         block exactly once) and ``last_migration_bytes`` is the exact byte
         count gathered. Refcount-zero prefix-cache blocks are dropped from
         the index rather than shipped — correctness needs only the live
-        set."""
+        set (a preempted request therefore re-prefills from scratch after
+        a consolidation; its stream is still bit-exact). The scheduling
+        policy and the waiting/preempted pools carry over."""
         self._check_live()
         eng = Engine(self.cfg, [full_params], self.max_batch, self.max_seq,
                      self.block_mgr.block_size, paged=self.paged,
                      prefix_cache=self.prefix_cache,
-                     prefill_chunk=self.prefill_chunk)
-        stage_caches = [w.cache for w in self.workers]
+                     prefill_chunk=self.prefill_chunk,
+                     policy=self.scheduler.policy)
+        stage_caches = [w.cache for w in self.runner.workers]
         if self.paged:
             self.block_mgr.drop_unreferenced_cache()
             live = self.block_mgr.blocks_of(r.rid for r in self.active())
@@ -461,10 +418,10 @@ class Engine:
             eng.last_migration_bytes = moved
         else:
             cache = gather_stage_caches(stage_caches)
-        eng.workers[0].cache = cache
-        eng.slots = list(self.slots)
-        eng.queue = self.queue
+        eng.runner.workers[0].cache = cache
         eng.block_mgr = self.block_mgr
+        eng.scheduler.adopt(self.scheduler, self.block_mgr)
+        eng.runner.rebuild_rows(eng.active(), self.block_mgr.tables)
         eng._rid = self._rid
         eng.finished = self.finished
         eng.steps = self.steps            # keep step metrics continuous
@@ -475,23 +432,21 @@ class Engine:
         requests (with gathered cache) stay on the first."""
         first = self.consolidated(full_params)
         others = []
-        for _ in range(1, len(self.workers)):
+        for _ in range(1, len(self.runner.workers)):
             others.append(Engine(self.cfg, [full_params], self.max_batch,
                                  self.max_seq, self.block_mgr.block_size,
                                  paged=self.paged,
                                  prefix_cache=self.prefix_cache,
-                                 prefill_chunk=self.prefill_chunk))
+                                 prefill_chunk=self.prefill_chunk,
+                                 policy=self.scheduler.policy))
         return [first] + others
 
     def retire(self):
         """Mark this engine unusable after a ServingEndpoint swapped in
         its consolidated successor. The successor aliases this engine's
-        block manager, queue, and slots — clear our references and drop
+        block manager, queues, and slots — clear our references and drop
         worker caches so any stale use raises (``_check_live``) instead of
         silently corrupting block tables it no longer owns."""
         self.retired = True
-        self.slots = [None] * self.max_batch
-        self.queue = collections.deque()
-        for w in self.workers:
-            w.retire()
-        self.workers = []
+        self.scheduler.clear()
+        self.runner.retire()

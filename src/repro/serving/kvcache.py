@@ -85,6 +85,7 @@ class BlockManager:
         self.cache_queries = 0
         self.cache_hit_tokens = 0
         self.evictions = 0
+        self.preempt_releases = 0
 
     # ------------------------------------------------------------ alloc
     def blocks_needed(self, n_tokens: int) -> int:
@@ -241,6 +242,29 @@ class BlockManager:
         if t:
             for blk in reversed(t.blocks):
                 self._unref_block(blk)
+
+    def release_for_preempt(self, request_id: int) -> int:
+        """Release a *preempted* request's blocks back to the pool.
+
+        Mechanically this unrefs the same way ``free`` does, but the
+        semantics differ: the request is suspended, not finished, and it
+        WILL come back. With the prefix cache on, every committed full
+        block stays registered in the hash index (refcount-zero, LRU-
+        evictable like any cached block), so the request's re-admission
+        matches its own prefix and re-prefills only the tail that was
+        never committed — or was evicted in the meantime. Preemption-by-
+        recompute is therefore O(uncached tail), not O(prompt + output).
+        Without the prefix cache the release is a plain free and resume
+        recomputes the whole chain. Returns the number of block
+        references released (0 if the request held no table).
+        """
+        t = self.tables.pop(request_id, None)
+        if t is None:
+            return 0
+        for blk in reversed(t.blocks):
+            self._unref_block(blk)
+        self.preempt_releases += 1
+        return len(t.blocks)
 
     def drop_unreferenced_cache(self):
         """Forget every refcount-zero cached block (index entries and

@@ -1,0 +1,158 @@
+"""Plan execution for the serving engine: the ModelRunner.
+
+The runner is the compute half of the scheduler/runner split
+(serving/scheduler.py): it owns the ``StageWorker`` pipeline and turns a
+``ScheduleBatch``'s assignments into forwards — prefill chunks for one
+slot, one batched decode over the decode set — returning logits. It
+holds **no queue or policy state**; everything it knows about a request
+is the slot / tokens / positions the engine hands it.
+
+It also owns the paged layout's batched block table: a ``(B,
+table_width)`` int32 array kept **incrementally** current — rows are
+updated on allocate / extend / free / preempt instead of being rebuilt
+from the BlockManager every step (the pre-split engine rebuilt and
+re-uploaded the whole table per forward). The device-side copy is cached
+too and only re-uploaded after a row actually changes, so steady-state
+decode steps (no block boundary crossed) reuse the same device array.
+Idle slots point at the null page so their (unused) writes never land in
+a live page; for decode, half-prefilled slots are masked out the same
+way — they take no part in the decode batch and their dummy writes must
+not land in live (possibly shared) pages.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serving.worker import StageWorker
+
+
+class ModelRunner:
+    def __init__(self, cfg: ModelConfig, stage_params: Sequence[dict],
+                 max_batch: int, max_seq: int, *, paged: bool,
+                 n_blocks: int, block_size: int):
+        self.cfg = cfg
+        self.paged = paged
+        self.max_batch = max_batch
+        # one extra trash page: idle slots' block-table rows point here so
+        # their (unused) decode writes never land in a live page
+        self._null_page = n_blocks
+        self._table_width = max_seq // block_size + 1
+        n = len(stage_params)
+        self.workers = [StageWorker(cfg, p, n, i, max_batch, max_seq,
+                                    paged=paged, n_pages=n_blocks + 1,
+                                    page_size=block_size)
+                        for i, p in enumerate(stage_params)]
+        self._bt = np.full((max_batch, self._table_width), self._null_page,
+                           np.int32)
+        self._bt_dev = None             # cached device copy, None = dirty
+        # masked decode-view cache: (frozen skip set, device array) — a
+        # mixed step with the same half-prefilled slots and unchanged rows
+        # reuses it instead of re-masking + re-uploading every forward
+        self._masked_dev = (None, None)
+
+    # --------------------------------------------------- block-table rows
+    def set_row(self, slot: int, blocks: Sequence[int]):
+        """(Re)write one slot's block-table row: called on allocate and
+        whenever extend crosses a block boundary."""
+        if not self.paged:
+            return
+        row = self._bt[slot]
+        row[:] = self._null_page
+        row[:len(blocks)] = blocks
+        self._bt_dev = None
+        self._masked_dev = (None, None)
+
+    def clear_row(self, slot: int):
+        """Point a vacated slot (finish / preempt) back at the null page."""
+        if not self.paged:
+            return
+        self._bt[slot] = self._null_page
+        self._bt_dev = None
+        self._masked_dev = (None, None)
+
+    def rebuild_rows(self, requests: Iterable, tables: dict):
+        """Full rebuild from BlockManager state — only needed when a
+        consolidated engine adopts another engine's residents."""
+        if not self.paged:
+            return
+        self._bt[:] = self._null_page
+        for r in requests:
+            blocks = tables[r.rid].blocks
+            self._bt[r.slot, :len(blocks)] = blocks
+        self._bt_dev = None
+        self._masked_dev = (None, None)
+
+    def _tables(self) -> jnp.ndarray:
+        if self._bt_dev is None:
+            self._bt_dev = jnp.asarray(self._bt)
+        return self._bt_dev
+
+    # ------------------------------------------------------------ compute
+    def prefill(self, slot: int, tokens: Sequence[int], start: int, n: int,
+                prefix_embeds=None):
+        """One prefill forward over rows [start, start+n) of a request's
+        chain, writing KV through the slot's block-table row (paged) or
+        the slot's contiguous strip. Returns the pipeline output — the
+        last stage's logits at the final row."""
+        prefix = None
+        if prefix_embeds is not None:
+            prefix = jnp.asarray(prefix_embeds)[None]
+        h = jnp.asarray([list(tokens)], jnp.int32)
+        positions = jnp.arange(start, start + n, dtype=jnp.int32)[None]
+        bt = None
+        if self.paged:
+            bt = self._tables()[slot:slot + 1]
+        for w in self.workers:
+            h = w.prefill_slot(h, slot, positions, prefix_embeds=prefix,
+                               block_tables=bt, hist_len=start)
+        return h
+
+    def decode(self, reqs: Sequence, skip_slots: Sequence[int] = ()):
+        """One batched decode over ``reqs`` (each contributes its last
+        generated token at its next cache position). ``skip_slots`` are
+        live-but-not-decoding slots (half-prefilled residents) whose
+        table rows are masked to the null page for this forward."""
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        positions = np.zeros((self.max_batch, 1), np.int32)
+        for r in reqs:
+            tokens[r.slot, 0] = r.generated[-1]
+            positions[r.slot, 0] = r.pos_next
+        bt = None
+        if self.paged:
+            if skip_slots:
+                key = frozenset(skip_slots)
+                if self._masked_dev[0] != key:
+                    masked = self._bt.copy()
+                    masked[list(skip_slots)] = self._null_page
+                    self._masked_dev = (key, jnp.asarray(masked))
+                bt = self._masked_dev[1]
+            else:
+                bt = self._tables()
+        h = jnp.asarray(tokens)
+        pos = jnp.asarray(positions)
+        for w in self.workers:
+            h = w.decode(h, pos, block_tables=bt)
+        return h
+
+    # -------------------------------------------------------- maintenance
+    def copy_pages(self, src: int, dst: int):
+        """Apply a prefix-cache copy-on-write to every stage's pools."""
+        for w in self.workers:
+            w.copy_pages(src, dst)
+
+    def clear_slot(self, slot: int):
+        """Zero a vacated slot's recurrent state on every stage."""
+        for w in self.workers:
+            w.clear_slot(slot)
+
+    def retire(self):
+        """Drop caches and params so a retired engine's stale runner
+        fails fast instead of writing into pools it no longer owns."""
+        for w in self.workers:
+            w.retire()
+        self.workers = []

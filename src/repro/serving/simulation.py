@@ -31,7 +31,9 @@ from repro.core.parallelism import NoPlacement
 from repro.core.types import GB, ColdStartScheme, ModelProfile, ServerSpec
 from repro.workloads.generator import ModelInstance, Request
 
-KV_BYTES_PER_TOKEN = 512 * 1024      # Llama2-7B-class fp16 KV per token
+# Fallback when a ModelProfile carries no KV geometry
+# (ModelProfile.kv_bytes_per_token): Llama2-7B-class fp16 KV per token.
+KV_BYTES_PER_TOKEN = 512 * 1024
 BG_FETCH_WEIGHT = 0.5                # background (consolidation) fetch priority
 
 
@@ -121,7 +123,8 @@ class ServerlessSim:
                 timings=base.timings,
                 slo=type(base.slo)(inst.slo_ttft, inst.slo_tpot),
                 max_pp=1 if system != "hydra" else base.max_pp,
-                full_hbm_bytes=base.full_hbm_bytes))
+                full_hbm_bytes=base.full_hbm_bytes,
+                kv_bytes_per_token=base.kv_bytes_per_token))
 
         self.queues: Dict[str, collections.deque] = collections.defaultdict(
             collections.deque)
@@ -153,6 +156,12 @@ class ServerlessSim:
         if s <= 1:
             return t.t_d
         return t.t_d * (s - w + w / s) + t.t_n * s
+
+    def _kv_bytes_per_token(self, model: str) -> int:
+        """Per-model KV footprint from the profile's geometry; the
+        Llama2-7B-class constant when the profile lacks it."""
+        kv = self._profile(model).kv_bytes_per_token
+        return kv if kv is not None else KV_BYTES_PER_TOKEN
 
     # ============================================================ requests
     def submit(self, requests: Sequence[Request]):
@@ -524,7 +533,8 @@ class ServerlessSim:
 
     def _migration_seconds(self, grp: Group) -> float:
         kv_bytes = sum(r.prompt_tokens + self._tokens_done(r)
-                       for r in grp.active) * KV_BYTES_PER_TOKEN
+                       for r in grp.active) \
+            * self._kv_bytes_per_token(grp.model)
         # gathered over (s-1) source workers in parallel, streamed
         bw = min(self.cluster.servers[w.server_id].spec.nic_bytes_per_s
                  for w in grp.workers)

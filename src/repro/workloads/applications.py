@@ -10,7 +10,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-from repro.core.types import GB, SLO, TimingProfile
+from repro.core.types import GB, SLO, ModelProfile, TimingProfile
 
 
 @dataclass(frozen=True)
@@ -59,3 +59,14 @@ APPLICATIONS = [
 def timings_for(model: str) -> TimingProfile:
     w = WARM[model]
     return TimingProfile(t_p=w.ttft, t_d=w.tpot)
+
+
+def kv_bytes_for(model: str) -> int:
+    """Per-token KV footprint from the registered model geometry (fp16):
+    for llama2-7b this reproduces the 512 KiB/token constant the
+    simulation used to hardcode; 13B-class models pin ~1.6x that."""
+    from repro.configs import get_config       # paper_models registers these
+    cfg = get_config(model)
+    n_attn = cfg.n_periods * sum(1 for m in cfg.mixer_pattern if m == "attn")
+    return ModelProfile.kv_bytes_from_geometry(n_attn, cfg.n_kv_heads,
+                                               cfg.head_dim)

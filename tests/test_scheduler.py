@@ -1,0 +1,307 @@
+"""Scheduler/runner split: scheduling policies, preemption, resume.
+
+Three layers of guarantees:
+  * policy units (no model) — FCFS vs priority vs SLO-deadline admission
+    ordering, preemption victim selection, and plan-level behaviour of
+    ``Scheduler.schedule`` under slot pressure;
+  * end-to-end bit-exactness — greedy outputs are identical with and
+    without a forced preempt/resume (prefix cache on AND off, and across
+    a §6.2 consolidation of the preempted state), and the FCFS policy
+    matches the other policies exactly when no priorities/SLOs are set
+    (the pre-split engine's behaviour, which the untouched
+    test_engine/test_serving_api/test_paged_kv suites pin);
+  * overload — under an arrival burst beyond capacity the SLO-deadline
+    policy preempts background work and beats FCFS on TTFT-SLO
+    attainment.
+"""
+
+import jax
+import pytest
+
+from conftest import smoke
+from repro.core.types import SLO
+from repro.models import build_model
+from repro.serving.api import SamplingParams
+from repro.serving.endpoint import ServingEndpoint
+from repro.serving.engine import Engine
+from repro.serving.kvcache import BlockManager
+from repro.serving.scheduler import (FCFSPolicy, GenRequest, PriorityPolicy,
+                                     Scheduler, SLOPolicy, make_policy)
+
+PROMPTS = [[5, 7, 9, 11], [3, 1, 4, 1, 5, 9, 2], [42] * 6, [8, 6, 7]]
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = smoke("granite-3-8b")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# Policy units (no model)
+# ---------------------------------------------------------------------------
+
+
+def _req(rid, priority=0, slo=None, submit=0, prompt_len=4, max_new=4):
+    r = GenRequest(rid, list(range(prompt_len)),
+                   SamplingParams(max_new=max_new, priority=priority,
+                                  slo=slo))
+    r.metrics.submit_step = submit
+    return r
+
+
+def _running(req, slot, tokens=(1,), last_step=1):
+    req.slot = slot
+    req.prefill_upto = req.prompt_total
+    req.prefilled = req.prompt_total
+    req.generated = list(tokens)
+    req.metrics.last_token_step = last_step
+    return req
+
+
+def _order(policy, reqs, step=0):
+    return [r.rid for r in
+            sorted(reqs, key=lambda r: policy.sort_key(r, step))]
+
+
+def test_fcfs_policy_orders_by_submission_and_never_preempts():
+    p = FCFSPolicy()
+    reqs = [_req(2, priority=9), _req(0), _req(1, slo=SLO(1.0, 1.0))]
+    assert _order(p, reqs) == [0, 1, 2]          # priority/SLO ignored
+    victims = [_running(_req(5), 0), _running(_req(6), 1)]
+    assert p.victim(victims, _req(7, priority=9), step=3) is None
+
+
+def test_priority_policy_order_and_victim():
+    p = PriorityPolicy()
+    reqs = [_req(0, priority=0), _req(1, priority=2), _req(2, priority=2)]
+    assert _order(p, reqs) == [1, 2, 0]          # high first, FCFS within
+    running = [_running(_req(3, priority=1), 0),
+               _running(_req(4, priority=0), 1),
+               _running(_req(5, priority=0), 2)]
+    # victim: lowest priority, newest within the level
+    assert p.victim(running, _req(6, priority=2), step=3).rid == 5
+    # never preempts an equal-or-higher priority resident
+    assert p.victim(running[:1], _req(7, priority=1), step=3) is None
+
+
+def test_slo_policy_edf_order_and_victim():
+    p = SLOPolicy()
+    tight = _req(2, slo=SLO(ttft=3.0, tpot=5.0), submit=0)
+    loose = _req(0, slo=SLO(ttft=50.0, tpot=5.0), submit=0)
+    none = _req(1)                               # background: deadline inf
+    assert _order(p, [none, loose, tight]) == [2, 0, 1]
+    # a streaming request's deadline tracks its last token + tpot budget
+    streaming = _running(_req(3, slo=SLO(ttft=3.0, tpot=2.0)), 0,
+                         last_step=10)
+    assert p.deadline(streaming) == 12.0
+    bg = _running(_req(4), 1, last_step=10)      # no SLO: inf deadline
+    # the latest-deadline resident goes first; never for a later incoming
+    assert p.victim([streaming, bg], tight, step=11).rid == 4
+    assert p.victim([streaming], _req(5, slo=SLO(ttft=99.0, tpot=99.0),
+                                      submit=0), step=11) is None
+
+
+def test_make_policy_lookup_and_passthrough():
+    assert isinstance(make_policy("fcfs"), FCFSPolicy)
+    assert isinstance(make_policy("priority"), PriorityPolicy)
+    assert isinstance(make_policy("slo"), SLOPolicy)
+    inst = SLOPolicy()
+    assert make_policy(inst) is inst
+    with pytest.raises(ValueError, match="unknown scheduling policy"):
+        make_policy("edf")
+
+
+def test_scheduler_plans_preemption_under_slot_pressure():
+    """Plan-level check, no model: with both slots held by background
+    work, a higher-priority submission is admitted by preempting the
+    newest low-priority resident; the victim's blocks are released and
+    it moves to the preempted pool for re-admission."""
+    bm = BlockManager(n_blocks=16, block_size=4, bytes_per_token=2)
+    sched = Scheduler(bm, max_batch=2, policy="priority")
+    bg = []
+    for rid in (0, 1):
+        r = _req(rid, priority=0)
+        bm.allocate(rid, r.prompt_total)
+        bg.append(_running(r, rid))
+    sched.slots = [bg[0], bg[1]]
+    hi = _req(2, priority=5)
+    sched.submit(hi)
+    sched.begin_step(2, float("inf"))
+    plan = sched.schedule()
+    assert [r.rid for r in plan.admitted] == [2]
+    assert [(r.rid, s) for r, s in plan.preempted] == [(1, 1)]
+    assert plan.prefills[0].req is hi and plan.prefills[0].n == 4
+    assert hi.slot == 1 and bg[1].slot is None
+    assert bg[1] in sched.preempted and bg[1].metrics.preemptions == 1
+    assert bg[1].rid not in bm.tables            # blocks released
+    assert plan.decodes == (bg[0],)              # victim left the batch
+    # FCFS under the same pressure defers instead
+    sched2 = Scheduler(BlockManager(16, 4, 2), max_batch=1, policy="fcfs")
+    res = _running(_req(0), 0)
+    sched2.block_mgr.allocate(0, res.prompt_total)
+    sched2.slots = [res]
+    sched2.submit(_req(1, priority=5))
+    sched2.begin_step(2, float("inf"))
+    plan2 = sched2.schedule()
+    assert plan2.idle and not plan2.admitted and not plan2.preempted
+
+
+# ---------------------------------------------------------------------------
+# End-to-end (model): bit-exactness and policy equivalence
+# ---------------------------------------------------------------------------
+
+
+def _stream(cfg, params, policy="fcfs", **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_seq", 64)
+    eng = Engine(cfg, [params], policy=policy, **kw)
+    reqs = [eng.submit(p, SamplingParams(max_new=8)) for p in PROMPTS]
+    eng.run()
+    assert all(r.done for r in reqs)
+    return [r.generated for r in reqs], eng
+
+
+def test_policies_identical_without_knobs(granite):
+    """With no priorities/SLOs set every policy degenerates to FCFS and
+    all greedy streams are bit-exact — the pre-split engine's behaviour
+    (pinned by the untouched engine/serving suites) in both layouts."""
+    cfg, params = granite
+    want, _ = _stream(cfg, params, policy="fcfs", paged=False)
+    for policy in ("fcfs", "priority", "slo"):
+        got, eng = _stream(cfg, params, policy=policy, paged=True)
+        assert got == want
+        assert eng.scheduler.n_preemptions == 0
+
+
+@pytest.mark.parametrize("prefix_cache", [False, True])
+def test_forced_preempt_resume_bit_exact(granite, prefix_cache):
+    """A preempted-and-resumed greedy request reproduces its
+    uninterrupted token stream exactly. With the prefix cache on, the
+    resume re-prefills only the uncached tail (cached_tokens covers the
+    committed full blocks of prompt + emitted tokens)."""
+    cfg, params = granite
+    ref = Engine(cfg, [params], max_batch=2, max_seq=64, block_size=8,
+                 paged=True, prefix_cache=prefix_cache)
+    want = [ref.submit(list(range(3, 21)), SamplingParams(max_new=10)),
+            ref.submit(PROMPTS[1], SamplingParams(max_new=10))]
+    ref.run()
+
+    eng = Engine(cfg, [params], max_batch=2, max_seq=64, block_size=8,
+                 paged=True, prefix_cache=prefix_cache)
+    victim = eng.submit(list(range(3, 21)), SamplingParams(max_new=10))
+    other = eng.submit(PROMPTS[1], SamplingParams(max_new=10))
+    for _ in range(4):
+        eng.step()
+    assert not victim.done and len(victim.generated) >= 3
+    eng.preempt(victim)
+    assert victim.slot is None and victim.metrics.preemptions == 1
+    out = eng.step()                      # other decodes; victim resumes
+    assert any(ev.rid == other.rid for ev in out.events)
+    eng.run()
+    assert victim.generated == want[0].generated
+    assert other.generated == want[1].generated
+    if prefix_cache:
+        # resume reused the committed prefix blocks: prompt(18 rows) +
+        # emitted tokens had >= 2 full blocks of 8 committed
+        assert victim.metrics.cached_tokens >= 16
+    else:
+        assert victim.metrics.cached_tokens == 0
+    bm = eng.block_mgr
+    assert bm.free_blocks == bm.n_blocks
+    assert bm.preempt_releases == 1
+
+
+def test_priority_preemption_under_pressure_bit_exact(granite):
+    """With a single slot, a high-priority arrival evicts the running
+    low-priority request; both streams still match their uninterrupted
+    references after the victim resumes."""
+    cfg, params = granite
+    def solo(prompt, max_new):
+        e = Engine(cfg, [params], max_batch=1, max_seq=64, block_size=8,
+                   paged=True, prefix_cache=True)
+        r = e.submit(prompt, SamplingParams(max_new=max_new))
+        e.run()
+        return r.generated
+
+    eng = Engine(cfg, [params], max_batch=1, max_seq=64, block_size=8,
+                 paged=True, prefix_cache=True, policy="priority")
+    bg = eng.submit(list(range(3, 19)),
+                    SamplingParams(max_new=12, priority=0))
+    for _ in range(3):
+        eng.step()
+    hi = eng.submit(PROMPTS[0], SamplingParams(max_new=4, priority=3))
+    out = eng.step()
+    assert out.preempted == (bg.rid,)
+    assert hi.slot is not None            # admitted into the vacated slot
+    eng.run()
+    assert hi.done and bg.done
+    assert hi.generated == solo(PROMPTS[0], 4)
+    assert bg.generated == solo(list(range(3, 19)), 12)
+    assert bg.metrics.preemptions == 1
+
+
+def test_preempted_request_survives_consolidation(granite):
+    """§6.2 scale-down with a request sitting in the preempted pool: the
+    policy and the pool carry over to the consolidated engine, the
+    resume re-prefills from scratch (cold caches are dropped at
+    migration), and the stream stays bit-exact."""
+    cfg, params = granite
+    m = build_model(cfg)
+    ref = Engine(cfg, [params], max_batch=2, max_seq=64, block_size=8,
+                 paged=True, prefix_cache=True)
+    want = [ref.submit(list(range(3, 19)), SamplingParams(max_new=8)),
+            ref.submit(PROMPTS[1], SamplingParams(max_new=8))]
+    ref.run()
+
+    sp = [m.slice_stage_params(params, 2, i) for i in range(2)]
+    ep = ServingEndpoint(Engine(cfg, sp, max_batch=2, max_seq=64,
+                                block_size=8, paged=True, prefix_cache=True,
+                                policy="slo"))
+    a = ep.submit(list(range(3, 19)), SamplingParams(max_new=8))
+    b = ep.submit(PROMPTS[1], SamplingParams(max_new=8))
+    for _ in range(3):
+        ep.step()
+    ep.engine.preempt(a)
+    ep.consolidate(params)
+    assert ep.policy.name == "slo"        # policy survives the swap
+    assert a in ep.engine.scheduler.preempted
+    ep.run()
+    assert a.generated == want[0].generated
+    assert b.generated == want[1].generated
+    assert a.metrics.preemptions == 1
+
+
+def test_slo_policy_beats_fcfs_on_overload(granite):
+    """Arrival burst beyond capacity with mixed priorities/SLOs: the
+    SLO-deadline policy preempts loose background work to serve
+    tight-TTFT requests and attains strictly more TTFT SLOs than FCFS."""
+    cfg, params = granite
+
+    def attainment(policy):
+        eng = Engine(cfg, [params], max_batch=2, max_seq=96, block_size=8,
+                     paged=True, prefix_cache=True, policy=policy)
+        background = [
+            eng.submit([10 + i] * 16,
+                       SamplingParams(max_new=16, priority=0,
+                                      slo=SLO(ttft=200.0, tpot=60.0)))
+            for i in range(2)]
+        for _ in range(3):
+            eng.step()
+        interactive = [
+            eng.submit([50 + i] * 4,
+                       SamplingParams(max_new=4, priority=2,
+                                      slo=SLO(ttft=6.0, tpot=30.0)))
+            for i in range(3)]
+        eng.run()
+        reqs = background + interactive
+        assert all(r.done for r in reqs)
+        hits = sum(r.metrics.ttft_steps <= r.params.slo.ttft for r in reqs)
+        return hits / len(reqs), eng.scheduler.n_preemptions
+
+    fcfs, fcfs_preempts = attainment("fcfs")
+    slo, slo_preempts = attainment("slo")
+    assert fcfs_preempts == 0             # FCFS never preempts
+    assert slo_preempts > 0               # EDF sheds background load
+    assert slo > fcfs

@@ -49,3 +49,28 @@ def test_burst():
     reqs = burst(insts[0], 30, at=3.0)
     assert len(reqs) == 30
     assert all(r.arrival == 3.0 for r in reqs)
+
+
+def test_kv_bytes_per_token_from_geometry():
+    """Per-model KV footprint replaces the simulation's hardcoded
+    constant: llama2-7b's geometry reproduces it exactly, 13B exceeds
+    it, and a geometry-less profile falls back to the constant."""
+    from repro.core.types import GB, ModelProfile, ServerSpec, SLO
+    from repro.serving.simulation import KV_BYTES_PER_TOKEN, ServerlessSim
+    from repro.workloads.applications import WARM, kv_bytes_for, timings_for
+
+    assert kv_bytes_for("llama2-7b") == KV_BYTES_PER_TOKEN == 512 * 1024
+    assert kv_bytes_for("llama2-13b") == 2 * 40 * 40 * 128 * 2
+    assert kv_bytes_for("llama2-13b") > KV_BYTES_PER_TOKEN
+
+    servers = [ServerSpec("s0", 2e9, 12e9, 64 * GB, 1)]
+    insts = make_instances(APPLICATIONS, 2)
+    profiles = {n: ModelProfile(
+        n, w.size_bytes, timings_for(n), SLO(7.5, 0.2),
+        kv_bytes_per_token=None if n == "opt-6.7b" else kv_bytes_for(n))
+        for n, w in WARM.items()}
+    sim = ServerlessSim(servers, profiles, insts)
+    for inst in insts:
+        want = KV_BYTES_PER_TOKEN if inst.base_model == "opt-6.7b" \
+            else kv_bytes_for(inst.base_model)
+        assert sim._kv_bytes_per_token(inst.name) == want
