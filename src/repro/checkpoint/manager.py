@@ -8,6 +8,7 @@ import json
 import os
 import shutil
 import tempfile
+import urllib.parse
 from typing import Any, Optional
 
 import jax
@@ -24,6 +25,34 @@ def _flatten_with_paths(tree):
     return out
 
 
+def encode_key(key: str) -> str:
+    """Collision-free, filename-safe encoding of a tree-path key.
+
+    The old ``key.replace("/", "__")`` collided for leaf keys that
+    themselves contain ``__`` (``{"a__b": x}`` vs ``{"a": {"b": y}}`` both
+    mapped to ``a__b``, silently overwriting one leaf's file with the
+    other's). Percent-encoding is injective — ``%`` itself is always
+    escaped — so distinct keys always get distinct file names. Restore
+    never needs a decoder: manifests record the original key next to the
+    encoded file name."""
+    return urllib.parse.quote(key, safe="")
+
+
+def fsync_dir(path: str):
+    """fsync a directory so a just-committed rename survives a crash.
+    Without this the directory entry for an ``os.rename`` commit can
+    still be lost on power failure even though the file contents were
+    fsynced. Best-effort on platforms that refuse O_RDONLY on dirs."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:                      # e.g. Windows
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
         self.dir = directory
@@ -38,7 +67,7 @@ class CheckpointManager:
         try:
             for key, leaf in leaves.items():
                 arr = np.asarray(leaf)
-                fname = key.replace("/", "__") + ".npy"
+                fname = encode_key(key) + ".npy"
                 np.save(os.path.join(tmp, fname), arr)
                 manifest["leaves"].append(
                     {"key": key, "file": fname, "dtype": str(arr.dtype),
@@ -50,8 +79,9 @@ class CheckpointManager:
             final = os.path.join(self.dir, f"step_{step:010d}")
             if os.path.exists(final):
                 shutil.rmtree(final)
-            os.rename(tmp, final)        # atomic commit
-        except BaseException:
+            os.rename(tmp, final)        # atomic commit...
+            fsync_dir(self.dir)          # ...durable only once the parent
+        except BaseException:            #    directory entry is on disk
             shutil.rmtree(tmp, ignore_errors=True)
             raise
         self._gc()

@@ -15,11 +15,15 @@ from typing import Dict, List, Optional
 from repro.core.types import ColdWorkerRecord, ServerSpec
 
 
+_DONE_EPS = 1e-6                     # bytes: below this a fetch is finished
+
+
 @dataclass
 class _NodeState:
     spec: ServerSpec
     workers: Dict[str, ColdWorkerRecord] = field(default_factory=dict)
     last_change: float = 0.0
+    finish_log: Dict[str, float] = field(default_factory=dict)
 
 
 class ContentionTracker:
@@ -31,18 +35,39 @@ class ContentionTracker:
 
     # ----------------------------------------------------------- internals
     def _settle(self, node: _NodeState, now: float):
-        """Eq. 4: advance pending sizes to `now` under the old fair share."""
-        n = len(node.workers)
-        if n:
-            share = node.spec.nic_bytes_per_s / n
-            elapsed = max(0.0, now - node.last_change)
+        """Eq. 4: advance pending sizes to `now`. Every fetch completion is
+        itself a bandwidth-change event, so the interval is walked
+        iteratively in finish-time order: when a resident's pending bytes
+        hit zero mid-interval, the survivors' share steps up to B/(n-1)
+        for the remainder — settling the whole interval at the stale B/n
+        would undercharge them the freed tail bandwidth. Completion times
+        are recorded in ``finish_log`` (queryable via ``finish_time``)."""
+        if now <= node.last_change:
+            return
+        t = node.last_change
+        while node.workers and t < now:
+            share = node.spec.nic_bytes_per_s / len(node.workers)
+            min_pending = min(w.pending_bytes for w in node.workers.values())
+            t_fin = t + max(min_pending, 0.0) / share
+            step_end = min(t_fin, now)
+            dt = max(step_end - t, 0.0)
             done = []
             for w in node.workers.values():
-                w.pending_bytes -= share * elapsed
-                if w.pending_bytes <= 0:
+                w.pending_bytes -= share * dt
+                if w.pending_bytes <= _DONE_EPS:
                     done.append(w.worker_id)
+            if not done and step_end <= t:
+                # the residual min pending cannot advance the clock at
+                # float resolution (t + dt == t): it is done *now* —
+                # without this the loop would spin forever
+                done = [w.worker_id for w in node.workers.values()
+                        if w.pending_bytes <= min_pending + _DONE_EPS]
             for wid in done:
+                node.finish_log[wid] = step_end
                 del node.workers[wid]
+            if not done and step_end >= now:
+                break
+            t = step_end
         node.last_change = now
 
     # ------------------------------------------------------------- queries
@@ -73,6 +98,9 @@ class ContentionTracker:
               deadline: float, now: float):
         node = self._nodes[server_id]
         self._settle(node, now)
+        # a re-admitted worker id starts a new fetch: its old completion
+        # record is stale (also bounds finish_log growth for id reuse)
+        node.finish_log.pop(worker_id, None)
         node.workers[worker_id] = ColdWorkerRecord(worker_id, deadline,
                                                    float(fetch_bytes))
 
@@ -80,7 +108,14 @@ class ContentionTracker:
         """Fetch finished (or worker aborted) — a bandwidth change event."""
         node = self._nodes[server_id]
         self._settle(node, now)
-        node.workers.pop(worker_id, None)
+        if node.workers.pop(worker_id, None) is not None:
+            node.finish_log[worker_id] = now
+
+    def finish_time(self, server_id: str, worker_id: str) -> Optional[float]:
+        """When the fluid model saw this fetch complete (None if still
+        pending / unknown). Populated by ``_settle`` at the exact
+        fair-share completion instant, or by an explicit ``complete``."""
+        return self._nodes[server_id].finish_log.get(worker_id)
 
     def fair_share(self, server_id: str, now: float) -> float:
         """Current fair share among residents (simulation ground truth)."""

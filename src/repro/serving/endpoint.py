@@ -11,21 +11,33 @@ it no longer owns.
 
 ``ServerlessFrontend`` glues the control plane to the data plane: it
 registers model profiles with the ``CentralController``, and on a cold
-start runs Alg. 1 (``plan_cold_start``), slices stage parameters for the
-chosen pipeline degree, and hands back a live endpoint.
+start runs Alg. 1 (``plan_cold_start``), *streams* each stage's parameter
+slice out of the deployment's ``ModelStore`` (repro/store/) with the
+``StreamedStageLoader``, and hands back a live endpoint whose
+``cold_start_timeline`` carries the measured per-stage spans. ``deploy``
+without a ``store_dir`` keeps the old in-memory behaviour as a
+``ModelStore.from_params`` tier — same bytes, same engine outputs, but
+the load path is the real one either way. Consolidation's full-model
+fill-in (``full_params``) fetches through the store too.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import itertools
 from dataclasses import dataclass
 from typing import Dict, Iterator, List, Optional, Sequence, Union
 
 from repro.configs.base import ModelConfig
+from repro.core.coldstart import OverlapFlags
 from repro.core.controller import CentralController
 from repro.core.types import ColdStartScheme, ModelProfile, ServerSpec
 from repro.models import build_model
 from repro.serving.api import SamplingParams, StepOutput, TokenEvent
 from repro.serving.engine import Engine, GenRequest
+from repro.store.loader import (ColdStartReport, StageLoadRecord,
+                                StreamedStageLoader)
+from repro.store.store import FetchFlow, FetchSchedule, ModelStore
 
 
 class ServingEndpoint:
@@ -34,9 +46,15 @@ class ServingEndpoint:
     the backing engine without invalidating the handle."""
 
     def __init__(self, engine: Engine,
-                 scheme: Optional[ColdStartScheme] = None):
+                 scheme: Optional[ColdStartScheme] = None,
+                 cold_start_timeline: Optional[ColdStartReport] = None):
         self._engine = engine
         self.scheme = scheme              # Alg.1 plan that built us, if any
+        # measured per-stage cold-start spans (store-backed cold starts)
+        self.cold_start_timeline = cold_start_timeline
+        # measured KV-migration transfer of the last consolidation, if the
+        # frontend drove it (ServerlessFrontend.consolidate)
+        self.last_migration_flow: Optional[FetchFlow] = None
 
     # -------------------------------------------------------- delegation
     @property
@@ -127,27 +145,63 @@ class ServingEndpoint:
 class _Deployment:
     cfg: ModelConfig
     model: object                         # repro.models.Model
-    params: dict
+    store: ModelStore
+    profile: ModelProfile
 
 
 class ServerlessFrontend:
-    """Control-plane glue: model registry + Alg. 1 planning + stage-param
-    slicing, producing ``ServingEndpoint``s. One frontend per cluster."""
+    """Control-plane glue: model registry + Alg. 1 planning + streamed
+    stage loading out of the per-model ``ModelStore``, producing
+    ``ServingEndpoint``s. One frontend per cluster; all its cold-start
+    fetches share one ``FetchSchedule`` over the controller's Alg. 2
+    contention tracker, so concurrent cold starts on a server contend."""
 
     def __init__(self, servers: Dict[str, ServerSpec],
                  controller: Optional[CentralController] = None,
                  **controller_kw):
         self.controller = controller or CentralController(servers,
                                                           **controller_kw)
+        self.servers = self.controller.servers
+        self.schedule = FetchSchedule(self.controller.tracker)
         self._deployed: Dict[str, _Deployment] = {}
+        self._fid = itertools.count()
+        # measured record of the last full_params store fetch (§6.2)
+        self.last_full_fetch: Optional[StageLoadRecord] = None
 
     def deploy(self, cfg: ModelConfig, params: dict,
-               profile: ModelProfile) -> None:
+               profile: ModelProfile, *,
+               store: Optional[ModelStore] = None,
+               store_dir: Optional[str] = None) -> ModelStore:
         """'Upload' a model: register its profile with the controller and
-        keep the weights ready for stage slicing on cold start."""
+        chunk the weights into a ``ModelStore`` the cold-start data plane
+        fetches from. ``store_dir`` writes (and serves from) the on-disk
+        chunk layout; an explicit ``store`` is used as-is; neither keeps
+        the weights behind an in-memory ``ModelStore.from_params`` tier
+        — every cold start streams through the store regardless."""
         self.controller.register_model(profile)
-        self._deployed[profile.name] = _Deployment(cfg, build_model(cfg),
-                                                   params)
+        model = build_model(cfg)
+        if store is None:
+            if store_dir is not None:
+                store = ModelStore.save(store_dir, model, params)
+            else:
+                store = ModelStore.from_params(model, params)
+        self._deployed[profile.name] = _Deployment(cfg, model, store,
+                                                   profile)
+        return store
+
+    def store_of(self, name: str) -> ModelStore:
+        return self._deployed[name].store
+
+    def _loader(self, dep: _Deployment, flags: OverlapFlags,
+                tier: Optional[str], load_bw: float) -> StreamedStageLoader:
+        return StreamedStageLoader(dep.store, self.schedule,
+                                   dep.profile.timings, flags,
+                                   load_bytes_per_s=load_bw, tier=tier)
+
+    def _load_bw(self, server_ids: Sequence[str]) -> float:
+        known = [self.servers[s].pcie_bytes_per_s for s in server_ids
+                 if s in self.servers]
+        return min(known) if known else 12e9
 
     def cold_start(self, name: str, *, now: float = 0.0,
                    free_hbm: Optional[Dict[str, int]] = None,
@@ -156,26 +210,81 @@ class ServerlessFrontend:
                    paged: Optional[bool] = None,
                    prefix_cache: bool = False,
                    prefill_chunk: Optional[int] = None,
-                   policy: str = "fcfs") -> ServingEndpoint:
-        """Alg. 1 cold start: pick a pipeline scheme, slice each stage's
-        parameters, and return a live endpoint (its ``scheme`` attribute
-        records the plan). ``prefix_cache``/``prefill_chunk``/``policy``
-        pass through to the engine (the first two need the paged layout)
-        and survive consolidation — a pipeline group that consolidates
-        mid-flight keeps scheduling by the same rules."""
+                   policy: str = "fcfs",
+                   flags: OverlapFlags = OverlapFlags.all(),
+                   tier: Optional[str] = None) -> ServingEndpoint:
+        """Alg. 1 cold start, executed: pick a pipeline scheme, admit
+        every stage's fetch into the shared schedule (stages landing on
+        the same server contend per Alg. 2), stream each stage's
+        parameters out of the store in manifest order, and return a live
+        endpoint whose ``cold_start_timeline`` is the *measured* per-stage
+        ``WorkerTimeline`` report under ``flags``.
+        ``prefix_cache``/``prefill_chunk``/``policy`` pass through to the
+        engine (the first two need the paged layout) and survive
+        consolidation."""
         dep = self._deployed[name]
         scheme = self.controller.plan_cold_start(name, free_hbm, now,
                                                  force_s=force_s)
         n_stages = min(max(scheme.s, min_stages), dep.cfg.n_periods)
-        stage_params = [dep.model.slice_stage_params(dep.params, n_stages, i)
-                        for i in range(n_stages)]
+        if n_stages == scheme.s:
+            servers = list(scheme.servers)
+        else:                       # min_stages overrode the plan's degree
+            pool = scheme.servers or tuple(self.servers)
+            servers = [pool[i % len(pool)] for i in range(n_stages)]
+        deadline = self.controller.fetch_deadline(name, scheme, now)
+        loader = self._loader(dep, flags, tier, self._load_bw(servers))
+        worker_ids = [f"{name}/f{next(self._fid)}-s{i}"
+                      for i in range(n_stages)]
+        stage_params, report = loader.load_group(
+            n_stages, servers=servers, now=now, worker_ids=worker_ids,
+            deadline=deadline, model_name=name)
         eng = Engine(dep.cfg, stage_params, max_batch=max_batch,
                      max_seq=max_seq, paged=paged,
                      prefix_cache=prefix_cache, prefill_chunk=prefill_chunk,
                      policy=policy)
-        return ServingEndpoint(eng, scheme=scheme)
+        return ServingEndpoint(eng, scheme=scheme,
+                               cold_start_timeline=report)
 
-    def full_params(self, name: str) -> dict:
-        """The un-sliced weights — what consolidation's standalone worker
-        loads (in the paper: fetched from the warm pool / object store)."""
-        return self._deployed[name].params
+    def full_params(self, name: str, *, now: float = 0.0,
+                    server_id: Optional[str] = None,
+                    tier: Optional[str] = None) -> dict:
+        """The un-sliced weights, fetched through the store (the paper's
+        warm-pool / object-store fill-in that consolidation's standalone
+        worker performs). The measured record of the last such fetch is
+        kept on ``last_full_fetch``."""
+        dep = self._deployed[name]
+        sid = server_id or next(iter(self.servers), "local")
+        # the consolidating worker is already warm: no container/lib/cuda
+        # stubs, just the measured fetch + load legs
+        warm = dataclasses.replace(dep.profile.timings,
+                                   t_cc=0.0, t_l=0.0, t_cu=0.0)
+        loader = StreamedStageLoader(dep.store, self.schedule, warm,
+                                     OverlapFlags.all(),
+                                     load_bytes_per_s=self._load_bw([sid]),
+                                     tier=tier)
+        params, record = loader.load_stage(
+            1, 0, server_id=sid, worker_id=f"{name}/full{next(self._fid)}",
+            now=now)
+        self.last_full_fetch = record
+        return params
+
+    def consolidate(self, endpoint: ServingEndpoint, name: str, *,
+                    now: float = 0.0,
+                    tier: Optional[str] = None) -> ServingEndpoint:
+        """§6.2 scale-down, data plane included: fetch the full weights
+        through the store onto the surviving worker's server, swap the
+        consolidated engine in behind the endpoint handle, then account
+        the measured KV-migration transfer (``last_migration_bytes`` —
+        the exact bytes the paged gather moved) as a real flow on that
+        server's NIC (``endpoint.last_migration_flow``)."""
+        sid = endpoint.scheme.servers[0] if (
+            endpoint.scheme and endpoint.scheme.servers) \
+            else next(iter(self.servers), "local")
+        params = self.full_params(name, now=now, server_id=sid, tier=tier)
+        endpoint.consolidate(params)
+        moved = endpoint.last_migration_bytes
+        if moved:
+            endpoint.last_migration_flow = self.schedule.transfer(
+                sid, f"{name}/kvmig{next(self._fid)}", moved,
+                now=max(now, self.last_full_fetch.timeline.ready))
+        return endpoint

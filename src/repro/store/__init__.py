@@ -1,0 +1,29 @@
+"""Cold-start data plane: chunked model store + streamed stage loading.
+
+``manifest``  — per-tensor chunk files + stage byte ranges per degree;
+``store``     — tiered byte sources (local/peer/remote) and the
+                contention-aware simulated-clock ``FetchSchedule``;
+``loader``    — ``StreamedStageLoader``: materializes stage params
+                tensor-by-tensor with a measured ``WorkerTimeline``;
+``validate``  — measured-vs-analytic cross-checks (fig8/fig9
+                ``--real-loader``, CI smoke, tests).
+"""
+
+from repro.store.loader import (ColdStartReport, StageLoadRecord,
+                                StreamedStageLoader, TensorSpan)
+from repro.store.manifest import (ChunkRecord, Manifest, StageChunk,
+                                  build_manifest, load_manifest, save_model)
+from repro.store.store import (DiskTier, FetchFlow, FetchSchedule,
+                               MemoryTier, ModelStore, StoreTier)
+from repro.store.validate import (StageCrossCheck, assert_within,
+                                  crosscheck_stages)
+
+__all__ = [
+    "ChunkRecord", "Manifest", "StageChunk", "build_manifest",
+    "load_manifest", "save_model",
+    "DiskTier", "FetchFlow", "FetchSchedule", "MemoryTier", "ModelStore",
+    "StoreTier",
+    "ColdStartReport", "StageLoadRecord", "StreamedStageLoader",
+    "TensorSpan",
+    "StageCrossCheck", "assert_within", "crosscheck_stages",
+]

@@ -62,3 +62,36 @@ def test_empty_dir(tmp_path, tree):
     mgr = CheckpointManager(str(tmp_path))
     restored, manifest = mgr.restore(tree)
     assert restored is None and manifest is None
+
+
+def test_adversarial_key_names_round_trip(tmp_path):
+    """Regression (ISSUE 5): the old ``"/" -> "__"`` file naming collided
+    for leaf keys containing ``__`` — ``{"a__b": x}`` and
+    ``{"a": {"b": y}}`` mapped to the same file, silently overwriting one
+    leaf with the other. The percent-encoding is injective."""
+    tree = {"a__b": jnp.full((3,), 1.0),
+            "a": {"b": jnp.full((3,), 2.0)},
+            "weird/_%_name": jnp.full((2,), 3.0),
+            "uniçode": jnp.full((2,), 4.0)}
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, tree)
+    restored, manifest = mgr.restore(tree)
+    assert manifest["step"] == 1
+    # every leaf got its own file
+    assert len({e["file"] for e in manifest["leaves"]}) == \
+        len(manifest["leaves"]) == 4
+    np.testing.assert_array_equal(np.asarray(restored["a__b"]),
+                                  np.full((3,), 1.0))
+    np.testing.assert_array_equal(np.asarray(restored["a"]["b"]),
+                                  np.full((3,), 2.0))
+
+
+def test_committed_checkpoint_gated_on_manifest(tmp_path, tree):
+    """The manifest-present invariant stays the commit gate: a step dir
+    that lost its manifest is not a checkpoint, durability (dir fsync)
+    notwithstanding."""
+    mgr = CheckpointManager(str(tmp_path))
+    path = mgr.save(3, tree)
+    assert mgr.all_steps() == [3]
+    os.unlink(os.path.join(path, "manifest.json"))
+    assert mgr.all_steps() == []

@@ -39,6 +39,48 @@ def test_eq4_settle_and_completion():
     assert tr.residents("s0") == []
 
 
+def test_mid_interval_completion_accelerates_survivor():
+    """Regression (ISSUE 5): a fetch finishing mid-interval is a
+    bandwidth-change event (Eq. 4) — the survivor must be charged the
+    full NIC from that instant, not the stale B/n share for the whole
+    interval."""
+    tr = ContentionTracker(one_server())          # B = 2 GB/s
+    tr.admit("s0", "small", 2e9, deadline=100.0, now=0.0)
+    tr.admit("s0", "big", 6e9, deadline=100.0, now=0.0)
+    # settle at t=3.5: small finished at t=2 (2 GB at B/2); big then ran
+    # 1.5 s at the full 2 GB/s -> fetched 2 + 3 = 5 GB, 1 GB pending.
+    tr.node_bandwidth("s0", 3.5)
+    (big,) = tr.residents("s0")
+    assert big.worker_id == "big"
+    assert math.isclose(big.pending_bytes, 1e9, rel_tol=1e-9)
+    assert math.isclose(tr.finish_time("s0", "small"), 2.0, rel_tol=1e-9)
+    # with the undercharging bug big survived past t=4; now it must not
+    tr.node_bandwidth("s0", 4.0 + 1e-9)
+    assert tr.residents("s0") == []
+    assert math.isclose(tr.finish_time("s0", "big"), 4.0, rel_tol=1e-6)
+
+
+def test_settle_terminates_on_subresolution_residue():
+    """A float-noise pending residue just above the done-epsilon, at a
+    clock value whose ulp exceeds the residue's drain time, must complete
+    immediately instead of spinning the event loop forever."""
+    tr = ContentionTracker(one_server())
+    tr.admit("s0", "w1", 1e9, deadline=1e9, now=1e6)
+    tr.residents("s0")[0].pending_bytes = 2e-6   # > _DONE_EPS, < ulp drain
+    tr.node_bandwidth("s0", 1e6 + 10.0)          # must terminate
+    assert tr.residents("s0") == []
+
+
+def test_simultaneous_completions_settle_in_one_event():
+    tr = ContentionTracker(one_server())
+    tr.admit("s0", "w1", 4e9, deadline=100.0, now=0.0)
+    tr.admit("s0", "w2", 4e9, deadline=100.0, now=0.0)
+    tr.node_bandwidth("s0", 10.0)
+    assert tr.residents("s0") == []
+    assert math.isclose(tr.finish_time("s0", "w1"), 4.0, rel_tol=1e-9)
+    assert math.isclose(tr.finish_time("s0", "w2"), 4.0, rel_tol=1e-9)
+
+
 def test_explicit_completion():
     tr = ContentionTracker(one_server())
     tr.admit("s0", "w1", 10e9, deadline=100.0, now=0.0)

@@ -1,0 +1,308 @@
+"""Cold-start data plane: chunked store, tiered fetches, streamed stage
+loading, and the measured-vs-analytic timeline contract (ISSUE 5)."""
+
+import itertools
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import smoke
+from repro.core.coldstart import OverlapFlags, worker_timeline
+from repro.core.types import GB, Gbps, ModelProfile, ServerSpec, SLO, \
+    TimingProfile
+from repro.models import build_model
+from repro.serving.api import SamplingParams
+from repro.serving.endpoint import ServerlessFrontend, ServingEndpoint
+from repro.serving.engine import Engine
+from repro.store import (FetchSchedule, ModelStore, StreamedStageLoader,
+                         assert_within, crosscheck_stages, load_manifest,
+                         save_model)
+
+T = TimingProfile(t_cc=2.0, t_l=2.5, t_cu=0.5, t_n=0.01, t_p=1.5, t_d=0.042)
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = smoke("granite-3-8b", n_layers=4)      # 4 periods -> s up to 4
+    m = build_model(cfg)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def disk_store(model_and_params, tmp_path_factory):
+    m, params = model_and_params
+    d = tmp_path_factory.mktemp("store")
+    return ModelStore.save(str(d), m, params)
+
+
+def _trees_equal(a, b):
+    fa = jax.tree_util.tree_flatten_with_path(a)[0]
+    fb = jax.tree_util.tree_flatten_with_path(b)[0]
+    assert len(fa) == len(fb)
+    for (pa, la), (pb, lb) in zip(fa, fb):
+        assert str(pa) == str(pb)
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ================================================================ manifest
+def test_manifest_stage_ranges_and_bytes(disk_store, model_and_params):
+    m, _ = model_and_params
+    man = disk_store.manifest
+    assert man.n_periods == m.cfg.n_periods
+    assert sorted(man.stage_ranges) == list(range(1, m.cfg.n_periods + 1))
+    for s in man.degrees:
+        assert man.stage_ranges[s] == m.stage_ranges(s)
+        # stage byte ranges must sum to the model's own accounting
+        for i in range(s):
+            assert disk_store.stage_bytes(s, i) == m.stage_bytes(s, i)
+        total = sum(disk_store.stage_bytes(s, i) for i in range(s))
+        assert total == disk_store.total_bytes
+
+
+def test_manifest_survives_reopen(disk_store, tmp_path, model_and_params):
+    m, params = model_and_params
+    save_model(str(tmp_path), m, params)
+    man = load_manifest(str(tmp_path))
+    assert man.to_json() == disk_store.manifest.to_json()
+
+
+def test_block_chunks_are_byte_ranges(disk_store):
+    """A stage's slice of a period-stacked chunk is a contiguous byte
+    range [p0*row, p1*row) — not the whole tensor."""
+    man = disk_store.manifest
+    s = 2
+    p0, p1 = man.stage_ranges[s][1]
+    for sc in man.stage_plan(s, 1):
+        if sc.chunk.role == "block":
+            rb = sc.chunk.row_bytes
+            assert (sc.offset, sc.length) == (p0 * rb, (p1 - p0) * rb)
+            assert sc.length < sc.chunk.nbytes
+
+
+# ============================================================= round trips
+@pytest.mark.parametrize("s", [1, 2, 4])
+def test_loader_matches_slice_stage_params(disk_store, model_and_params, s):
+    m, params = model_and_params
+    loader = StreamedStageLoader(disk_store, FetchSchedule.single(2e9))
+    for i in range(s):
+        sp, rec = loader.load_stage(s, i, worker_id=f"rt{s}-{i}")
+        _trees_equal(sp, m.slice_stage_params(params, s, i))
+        assert rec.fetched_bytes == disk_store.stage_bytes(s, i)
+        assert rec.tensors, "stream record must be tensor-granular"
+
+
+def test_memory_tier_matches_disk(model_and_params, disk_store):
+    m, params = model_and_params
+    mem = ModelStore.from_params(m, params)
+    ld_m = StreamedStageLoader(mem, FetchSchedule.single(2e9))
+    ld_d = StreamedStageLoader(disk_store, FetchSchedule.single(2e9))
+    a, _ = ld_m.load_stage(2, 0, worker_id="mem0")
+    b, _ = ld_d.load_stage(2, 0, worker_id="dsk0")
+    _trees_equal(a, b)
+
+
+# ================================== measured vs analytic (satellite matrix)
+FLAG_MATRIX = [OverlapFlags(p, st, ov) for p, st, ov
+               in itertools.product((False, True), repeat=3)]
+
+
+@pytest.mark.parametrize("s", [1, 2, 4])
+@pytest.mark.parametrize("flags", FLAG_MATRIX,
+                         ids=lambda f: f"pf{int(f.prefetch)}"
+                                       f"-st{int(f.stream)}"
+                                       f"-ov{int(f.overlap_load)}")
+def test_measured_spans_match_analytic(disk_store, flags, s):
+    """The full flag-combination matrix (notably prefetch=False with
+    overlap_load=True): StreamedStageLoader's measured spans must match
+    worker_timeline's analytic ones within 5% under equal bandwidths,
+    for s in {1, 2, 4}."""
+    checks = crosscheck_stages(disk_store, s, timings=T, flags=flags,
+                               nic_bytes_per_s=1e6, load_bytes_per_s=2e6)
+    assert_within(checks, 0.05)
+    # the runtime stubs and the fetch span are exact, not just within 5%
+    for c in checks:
+        for span in ("container", "lib", "cuda", "fetch"):
+            assert c.measured.timeline.spans[span] == \
+                pytest.approx(c.analytic.spans[span], abs=1e-9)
+
+
+def test_no_prefetch_waits_for_runtime_init(disk_store):
+    """Overlap semantics on the *executed* path: without prefetch the
+    measured fetch span starts only after every runtime-init span."""
+    for ov in (False, True):
+        fl = OverlapFlags(prefetch=False, stream=True, overlap_load=ov)
+        loader = StreamedStageLoader(disk_store, FetchSchedule.single(1e6),
+                                     T, fl, load_bytes_per_s=2e6)
+        _, rec = loader.load_stage(1, 0, worker_id=f"np{ov}")
+        tl = rec.timeline
+        for stage in ("container", "lib", "cuda"):
+            assert tl.spans["fetch"][0] >= tl.spans[stage][1] - 1e-12
+
+
+def test_no_stream_waits_for_full_fetch(disk_store):
+    fl = OverlapFlags(prefetch=True, stream=False, overlap_load=True)
+    loader = StreamedStageLoader(disk_store, FetchSchedule.single(1e6),
+                                 T, fl, load_bytes_per_s=2e6)
+    _, rec = loader.load_stage(1, 0, worker_id="ns")
+    first_load = min(t.load_start for t in rec.tensors)
+    assert first_load >= rec.timeline.spans["fetch"][1] - 1e-12
+
+
+# ===================================================== contention (Alg. 2)
+def test_concurrent_stage_fetches_contend():
+    """Two flows on one NIC fair-share it; the small one finishing frees
+    bandwidth that accelerates the big one (Eq. 4 event semantics)."""
+    sched = FetchSchedule.single(2e9, server_id="s0")
+    a = sched.admit("s0", "small", 2e9, now=0.0)
+    b = sched.admit("s0", "big", 6e9, now=0.0)
+    sched.resolve(a)
+    sched.resolve(b)
+    assert a.end == pytest.approx(2.0)       # 2 GB at B/2
+    # big: 2 s at 1 GB/s, then the remaining 4 GB at the full 2 GB/s
+    assert b.end == pytest.approx(4.0)
+    assert b.time_at_bytes(2e9) == pytest.approx(2.0)
+    assert b.time_at_bytes(6e9) == pytest.approx(4.0)
+
+
+def test_idle_server_restarts_clock_for_later_cold_start():
+    """Regression: a second cold start on an idle NIC must start its
+    fetch at its own `now` (prefetch = fetch at t=0), not be serialized
+    behind the first cold start's frozen history."""
+    sched = FetchSchedule.single(2e9, server_id="s0")
+    sched.transfer("s0", "first", 8e9, now=0.0)      # resolves at t=4
+    again = sched.transfer("s0", "second", 2e9, now=0.0)
+    assert again.start == pytest.approx(0.0)
+    assert again.seconds == pytest.approx(1.0)
+
+
+def test_second_frontend_cold_start_timeline_consistent(model_and_params,
+                                                        tmp_path):
+    """Two sequential cold starts through one frontend: both measured
+    timelines obey prefetch semantics (fetch span starts at `now`)."""
+    m, params = model_and_params
+    front = ServerlessFrontend(_servers())
+    front.deploy(m.cfg, params, _profile(m.cfg), store_dir=str(tmp_path))
+    ep1 = front.cold_start(m.cfg.name, min_stages=2, max_batch=2,
+                           max_seq=64)
+    ep2 = front.cold_start(m.cfg.name, min_stages=2, max_batch=2,
+                           max_seq=64)
+    for ep in (ep1, ep2):
+        for rec in ep.cold_start_timeline.stages:
+            assert rec.timeline.spans["fetch"][0] == pytest.approx(0.0)
+
+
+def test_tier_cap_binds_below_fair_share():
+    sched = FetchSchedule.single(2e9)
+    f = sched.transfer("local", "capped", 1e9, cap=0.5e9)
+    assert f.seconds == pytest.approx(2.0)   # 1 GB at the 0.5 GB/s tier
+
+
+def test_slow_remote_tier_is_slower(disk_store):
+    def ready(tier):
+        loader = StreamedStageLoader(disk_store,
+                                     FetchSchedule.single(16 * Gbps), T,
+                                     load_bytes_per_s=2e6, tier=tier)
+        _, rec = loader.load_stage(1, 0, worker_id=f"t-{tier}")
+        return rec.timeline.spans["fetch"][1] - \
+            rec.timeline.spans["fetch"][0]
+
+    slow = ModelStore.open(disk_store.tier("local").root,
+                           remote_bw=1e6)
+    loader = StreamedStageLoader(slow, FetchSchedule.single(16 * Gbps), T,
+                                 load_bytes_per_s=2e6, tier="remote")
+    _, rec = loader.load_stage(1, 0, worker_id="t-remote")
+    remote_fetch = rec.timeline.spans["fetch"][1] - \
+        rec.timeline.spans["fetch"][0]
+    assert remote_fetch == pytest.approx(disk_store.total_bytes / 1e6)
+    assert remote_fetch > ready("local")
+
+
+# ======================================================== frontend e2e
+def _servers():
+    return {f"srv{i}": ServerSpec(f"srv{i}", 16 * Gbps, 12e9, 24 * GB)
+            for i in range(4)}
+
+
+def _profile(cfg):
+    return ModelProfile(cfg.name, int(12.5 * GB), TimingProfile(),
+                        SLO(ttft=7.5, tpot=0.2))
+
+
+def test_frontend_cold_start_streams_from_disk(tmp_path, model_and_params):
+    """Acceptance: first token served through weights streamed from the
+    on-disk ModelStore, greedy outputs bit-exact with the in-memory
+    engine, and a measured timeline on the endpoint."""
+    m, params = model_and_params
+    cfg = m.cfg
+    front = ServerlessFrontend(_servers())
+    front.deploy(cfg, params, _profile(cfg), store_dir=str(tmp_path))
+    ep = front.cold_start(cfg.name, min_stages=2, max_batch=2, max_seq=64)
+    out = [ev.token for ev in ep.generate([5, 3, 8], SamplingParams(
+        max_new=8))]
+
+    ref = ServingEndpoint(Engine(cfg, [params], max_batch=2, max_seq=64))
+    want = [ev.token for ev in ref.generate([5, 3, 8], SamplingParams(
+        max_new=8))]
+    assert out == want
+
+    report = ep.cold_start_timeline
+    assert report is not None and len(report.stages) == ep.n_stages
+    assert report.total_bytes == front.store_of(cfg.name).total_bytes
+    for rec in report.stages:
+        assert set(rec.timeline.spans) == \
+            {"container", "lib", "cuda", "fetch", "load"}
+        assert rec.timeline.ready <= report.ready
+
+
+def test_frontend_in_memory_deploy_equivalent(model_and_params, tmp_path):
+    """deploy() without a store_dir goes through the from_params memory
+    tier — same engine outputs as the on-disk path."""
+    m, params = model_and_params
+    cfg = m.cfg
+
+    def run(**deploy_kw):
+        front = ServerlessFrontend(_servers())
+        front.deploy(cfg, params, _profile(cfg), **deploy_kw)
+        ep = front.cold_start(cfg.name, min_stages=2, max_batch=2,
+                              max_seq=64)
+        return [ev.token for ev in ep.generate([9, 1, 4, 7],
+                                               SamplingParams(max_new=6))]
+
+    assert run() == run(store_dir=str(tmp_path))
+
+
+def test_frontend_consolidate_through_store(model_and_params, tmp_path):
+    """§6.2 with the data plane attached: full weights fetched through
+    the store, outputs bit-exact across the swap, and the KV migration
+    bytes accounted as a real measured transfer."""
+    m, params = model_and_params
+    cfg = m.cfg
+    front = ServerlessFrontend(_servers())
+    front.deploy(cfg, params, _profile(cfg), store_dir=str(tmp_path))
+    ep = front.cold_start(cfg.name, min_stages=2, max_batch=2, max_seq=64,
+                          paged=True)
+    req = ep.submit([9, 8, 7], SamplingParams(max_new=8))
+    for _ in range(4):
+        ep.step()
+    front.consolidate(ep, cfg.name)
+    ep.run()
+
+    ref = ServingEndpoint(Engine(cfg, [params], max_batch=2, max_seq=64,
+                                 paged=True))
+    rr = ref.submit([9, 8, 7], SamplingParams(max_new=8))
+    ref.run()
+    assert req.generated == rr.generated
+    assert front.last_full_fetch.fetched_bytes == \
+        front.store_of(cfg.name).total_bytes
+    assert ep.last_migration_flow is not None
+    assert ep.last_migration_flow.size == ep.last_migration_bytes
+    assert ep.last_migration_flow.done
+
+
+def test_full_params_roundtrip(model_and_params, tmp_path):
+    m, params = model_and_params
+    front = ServerlessFrontend(_servers())
+    front.deploy(m.cfg, params, _profile(m.cfg), store_dir=str(tmp_path))
+    _trees_equal(front.full_params(m.cfg.name), params)
