@@ -1,25 +1,33 @@
 """End-to-end serverless serving driver: Azure-like bursty traffic over the
-paper's testbed, comparing serverless vLLM, ServerlessLLM and HydraServe,
-including a mid-run worker failure with cold-start recovery.
+paper's testbed, comparing serverless vLLM, ServerlessLLM and HydraServe —
+plus HydraServe under the proactive fleet policy (Alg. 1 model
+distribution + predictive prewarming + delayed downscale) — including a
+mid-run worker failure with cold-start recovery. Testbed and profiles are
+the shared benchmark definitions (benchmarks/common.py); every system row
+runs through the same ``FleetController`` policy core.
 
     PYTHONPATH=src python examples/serve_cluster.py [--rps 0.6] [--cv 8]
 """
 
 import argparse
+import os
+import sys
 
-from repro.core.types import GB, Gbps, ModelProfile, ServerSpec, SLO
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import profiles, testbed_i
+from repro.fleet.controller import FleetPolicy
 from repro.serving.simulation import ServerlessSim
-from repro.workloads.applications import (APPLICATIONS, WARM,
-                                          kv_bytes_for, timings_for)
+from repro.workloads.applications import APPLICATIONS
 from repro.workloads.generator import generate, make_instances
 
-
-def testbed():
-    servers = [ServerSpec(f"a10-{i}", 16 * Gbps, 12e9, 24 * GB, 1)
-               for i in range(4)]
-    servers += [ServerSpec(f"v100-{i}", 16 * Gbps, 12e9, 32 * GB, 4)
-                for i in range(4)]
-    return servers
+SYSTEMS = [
+    ("vllm", "vllm", None),
+    ("serverlessllm", "serverlessllm", None),
+    ("hydra", "hydra", None),
+    ("hydra+fleet", "hydra", FleetPolicy.proactive(
+        keepalive_s=300.0, placement_interval_s=30.0, placement_top_k=8)),
+]
 
 
 def main():
@@ -30,15 +38,12 @@ def main():
     ap.add_argument("--instances", type=int, default=64)
     args = ap.parse_args()
 
-    profiles = {n: ModelProfile(n, w.size_bytes, timings_for(n),
-                                SLO(7.5, 0.2),
-                                kv_bytes_per_token=kv_bytes_for(n))
-                for n, w in WARM.items()}
     print(f"{'system':16s} {'n':>5s} {'ttft_att':>9s} {'tpot_att':>9s} "
-          f"{'mean_ttft':>10s} {'p99':>7s} {'colds':>6s}")
-    for system in ("vllm", "serverlessllm", "hydra"):
+          f"{'mean_ttft':>10s} {'p99':>7s} {'colds':>6s} {'prewarm':>8s}")
+    for label, system, policy in SYSTEMS:
         insts = make_instances(APPLICATIONS, args.instances)
-        sim = ServerlessSim(testbed(), profiles, insts, system=system)
+        sim = ServerlessSim(testbed_i(), profiles(), insts, system=system,
+                            policy=policy)
         reqs = generate(insts, rps=args.rps, cv=args.cv,
                         duration=args.duration, seed=0)
         sim.submit(reqs)
@@ -47,9 +52,10 @@ def main():
                    lambda s=sim, i=insts: s.inject_failure(i[0].name))
         sim.run(until=args.duration * 6)
         m = sim.metrics()
-        print(f"{system:16s} {m['n']:5d} {m['ttft_attainment']:9.3f} "
+        print(f"{label:16s} {m['n']:5d} {m['ttft_attainment']:9.3f} "
               f"{m['tpot_attainment']:9.3f} {m['ttft_mean']:10.2f} "
-              f"{m['ttft_p99']:7.1f} {m['cold_starts']:6d}")
+              f"{m['ttft_p99']:7.1f} {m['cold_starts']:6d} "
+              f"{m['prewarms']:8d}")
 
 
 if __name__ == "__main__":

@@ -1,16 +1,19 @@
 """Cluster-level central controller: glues Algorithm 1 (parallelism size
-selection), Algorithm 2 (contention tracking) and the consolidation policy.
-Used by both the discrete-event serving simulation and the real JAX engine.
+selection), Algorithm 2 (contention tracking), the consolidation policy,
+and the fleet-wide placement registry behind Alg. 1 proactive model
+distribution. Used by both the discrete-event serving simulation and the
+real JAX engine (the ``FleetController`` in repro/fleet drives the same
+instance for either data plane).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.consolidation import (ConsolidationPolicy,
                                       SlidingWindowPredictor)
-from repro.core.parallelism import predict_tpot, select_scheme
+from repro.core.parallelism import NoPlacement, predict_tpot, select_scheme
 from repro.core.placement import ContentionTracker
 from repro.core.types import ColdStartScheme, ModelProfile, ServerSpec, SLO
 
@@ -27,6 +30,11 @@ class CentralController:
         self.overlapped = overlapped
         self.max_pp_cap = max_pp_cap
         self.models: Dict[str, ModelProfile] = {}
+        # fleet-wide placement state: model -> {server_id: tier_name}.
+        # Written by Alg. 1 proactive distribution, read by cold-start
+        # planning (seeded servers fetch from fast tiers) and the fleet
+        # benchmark's placement accounting.
+        self.placements: Dict[str, Dict[str, str]] = {}
 
     # ------------------------------------------------------------ registry
     def register_model(self, profile: ModelProfile):
@@ -35,11 +43,67 @@ class CentralController:
     def record_request(self, model: str, now: float):
         self.predictor.record(model, now)
 
+    # ----------------------------------------------------------- placement
+    def record_placement(self, model: str, server_id: str,
+                         tier: str = "peer"):
+        self.placements.setdefault(model, {})[server_id] = tier
+
+    def drop_placement(self, model: str, server_id: Optional[str] = None):
+        if server_id is None:
+            self.placements.pop(model, None)
+        else:
+            self.placements.get(model, {}).pop(server_id, None)
+
+    def placed_servers(self, model: str) -> List[str]:
+        return list(self.placements.get(model, {}))
+
+    def placement_tier(self, model: str, server_id: str) -> Optional[str]:
+        return self.placements.get(model, {}).get(server_id)
+
+    def plan_distribution(self, ranked_models: Sequence[str],
+                          fanout: int = 2) -> List[Tuple[str, str]]:
+        """Alg. 1 proactive model distribution: walk the demand-ranked
+        models and give each up to ``fanout`` placement targets, spreading
+        over distinct servers fattest-NIC-first so hot models land where
+        a cold start fetches fastest. Already-seeded (model, server) pairs
+        are skipped; servers are load-balanced by how many placements they
+        already hold. Returns the new (model, server_id) seedings — the
+        caller executes them (host-cache fetch in the sim, a
+        ``ModelStore.place`` tier in the real data plane)."""
+        load = {sid: 0 for sid in self.servers}
+        for placed in self.placements.values():
+            for sid in placed:
+                if sid in load:
+                    load[sid] += 1
+        order = sorted(self.servers,
+                       key=lambda sid: (-self.servers[sid].nic_bytes_per_s,
+                                        sid))
+        out: List[Tuple[str, str]] = []
+        for name in ranked_models:
+            have = set(self.placed_servers(name))
+            want = fanout - len(have)
+            for sid in sorted(order, key=lambda sid: load[sid]):
+                if want <= 0:
+                    break
+                if sid in have:
+                    continue
+                out.append((name, sid))
+                load[sid] += 1
+                want -= 1
+        return out
+
     # ------------------------------------------------------- cold starts
     def plan_cold_start(self, model_name: str,
                         free_hbm: Optional[Dict[str, int]] = None,
                         now: float = 0.0, queue_wait: float = 0.0,
-                        force_s: Optional[int] = None) -> ColdStartScheme:
+                        force_s: Optional[int] = None,
+                        prefer: Optional[Sequence[str]] = None
+                        ) -> ColdStartScheme:
+        """Alg. 1 scheme selection. With ``prefer`` (e.g. the model's
+        proactively-seeded servers) planning is tried on that restricted
+        pool first — a feasible scheme on seeded servers beats one on the
+        open pool because its fetches come from a fast tier — falling
+        back to the whole cluster when the preferred pool can't host."""
         if free_hbm is None:              # idle cluster: all HBM available
             free_hbm = {sid: s.hbm_bytes for sid, s in self.servers.items()}
         model = self.models[model_name]
@@ -47,6 +111,19 @@ class CentralController:
             model = dataclasses.replace(
                 model, max_pp=min(model.max_pp, self.max_pp_cap))
         eff = self.tracker.effective_bandwidths(now)
+        if prefer:
+            sub = {sid: self.servers[sid] for sid in prefer
+                   if sid in self.servers}
+            if sub:
+                try:
+                    return select_scheme(
+                        model, sub,
+                        {sid: free_hbm.get(sid, 0) for sid in sub},
+                        {sid: eff[sid] for sid in sub},
+                        t_w=queue_wait, overlapped=self.overlapped,
+                        fixed_s=force_s)
+                except NoPlacement:
+                    pass
         return select_scheme(model, self.servers, free_hbm, eff,
                              t_w=queue_wait, overlapped=self.overlapped,
                              fixed_s=force_s)

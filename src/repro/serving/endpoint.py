@@ -144,9 +144,41 @@ class ServingEndpoint:
 @dataclass
 class _Deployment:
     cfg: ModelConfig
-    model: object                         # repro.models.Model
-    store: ModelStore
+    model: Optional[object]               # repro.models.Model; None for a
+    store: ModelStore                     # cold deploy from an on-disk store
     profile: ModelProfile
+
+
+class PendingColdStart:
+    """A cold start whose stage fetch flows are admitted on the shared
+    schedule but not yet resolved. ``finish()`` streams the stage
+    parameters and builds the live endpoint; everything begun before the
+    first ``finish`` contends on the simulated NICs."""
+
+    def __init__(self, name: str, dep: "_Deployment", scheme,
+                 flags: OverlapFlags, pending, engine_kw: dict):
+        self.name = name
+        self.scheme = scheme
+        self._dep = dep
+        self._flags = flags
+        self._pending = pending
+        self._engine_kw = engine_kw
+
+    @property
+    def n_stages(self) -> int:
+        return len(self._pending)
+
+    def finish(self) -> ServingEndpoint:
+        stage_params, records = [], []
+        for p in self._pending:
+            sp, rec = p.materialize()
+            stage_params.append(sp)
+            records.append(rec)
+        report = ColdStartReport(self.name, len(records), self._flags,
+                                 records)
+        eng = Engine(self._dep.cfg, stage_params, **self._engine_kw)
+        return ServingEndpoint(eng, scheme=self.scheme,
+                               cold_start_timeline=report)
 
 
 class ServerlessFrontend:
@@ -168,7 +200,7 @@ class ServerlessFrontend:
         # measured record of the last full_params store fetch (§6.2)
         self.last_full_fetch: Optional[StageLoadRecord] = None
 
-    def deploy(self, cfg: ModelConfig, params: dict,
+    def deploy(self, cfg: ModelConfig, params: Optional[dict],
                profile: ModelProfile, *,
                store: Optional[ModelStore] = None,
                store_dir: Optional[str] = None) -> ModelStore:
@@ -177,11 +209,22 @@ class ServerlessFrontend:
         fetches from. ``store_dir`` writes (and serves from) the on-disk
         chunk layout; an explicit ``store`` is used as-is; neither keeps
         the weights behind an in-memory ``ModelStore.from_params`` tier
-        — every cold start streams through the store regardless."""
+        — every cold start streams through the store regardless.
+
+        ``params=None`` is the *cold deploy* path: the model was never
+        resident in this process — its bytes already live in an existing
+        on-disk store (``store_dir``) or an explicit ``store``, and the
+        first cold start is the first time any of them are read."""
         self.controller.register_model(profile)
-        model = build_model(cfg)
+        model = build_model(cfg) if params is not None else None
         if store is None:
-            if store_dir is not None:
+            if params is None:
+                if store_dir is None:
+                    raise ValueError(
+                        "cold deploy (params=None) needs an existing store: "
+                        "pass store= or store_dir=")
+                store = ModelStore.open(store_dir)
+            elif store_dir is not None:
                 store = ModelStore.save(store_dir, model, params)
             else:
                 store = ModelStore.from_params(model, params)
@@ -203,16 +246,68 @@ class ServerlessFrontend:
                  if s in self.servers]
         return min(known) if known else 12e9
 
-    def cold_start(self, name: str, *, now: float = 0.0,
-                   free_hbm: Optional[Dict[str, int]] = None,
-                   force_s: Optional[int] = None, min_stages: int = 1,
-                   max_batch: int = 4, max_seq: int = 128,
-                   paged: Optional[bool] = None,
-                   prefix_cache: bool = False,
-                   prefill_chunk: Optional[int] = None,
-                   policy: str = "fcfs",
-                   flags: OverlapFlags = OverlapFlags.all(),
-                   tier: Optional[str] = None) -> ServingEndpoint:
+    def begin_cold_start(self, name: str, *, now: float = 0.0,
+                         free_hbm: Optional[Dict[str, int]] = None,
+                         force_s: Optional[int] = None, min_stages: int = 1,
+                         max_batch: int = 4, max_seq: int = 128,
+                         paged: Optional[bool] = None,
+                         prefix_cache: bool = False,
+                         prefill_chunk: Optional[int] = None,
+                         policy: str = "fcfs",
+                         flags: OverlapFlags = OverlapFlags.all(),
+                         tier: Optional[str] = None,
+                         fallback_tier: Optional[str] = None,
+                         prefer: Optional[Sequence[str]] = None
+                         ) -> "PendingColdStart":
+        """Phase 1 of a cold start: plan the Alg. 1 scheme and *admit*
+        every stage's fetch into the shared schedule without resolving
+        any of them. A fleet launching several models in one tick begins
+        them all first, then ``finish()``es each — flows landing on the
+        same server then contend per Alg. 2, exactly like the stages of
+        a single group already do.
+
+        ``prefer`` biases scheme selection toward those servers (the
+        fleet passes the model's proactive placements). When ``tier`` is
+        None and the scheme lands on a server this model is pre-seeded
+        on, the placement's tier is used automatically — a proactively
+        distributed model fetches from its fast tier; an *unseeded*
+        scheme falls back to ``fallback_tier`` (the fleet passes the
+        store's authoritative/slowest tier; None keeps the store's
+        default fastest tier, the single-model behaviour)."""
+        dep = self._deployed[name]
+        scheme = self.controller.plan_cold_start(name, free_hbm, now,
+                                                 force_s=force_s,
+                                                 prefer=prefer)
+        n_stages = min(max(scheme.s, min_stages), dep.cfg.n_periods)
+        if n_stages == scheme.s:
+            servers = list(scheme.servers)
+        else:                       # min_stages overrode the plan's degree
+            pool = scheme.servers or tuple(self.servers)
+            servers = [pool[i % len(pool)] for i in range(n_stages)]
+        if tier is None:
+            placed = {self.controller.placement_tier(name, sid)
+                      for sid in servers} - {None}
+            for t in sorted(placed):
+                if dep.store.has_tier(t):
+                    tier = t
+                    break
+            else:
+                tier = fallback_tier
+        deadline = self.controller.fetch_deadline(name, scheme, now)
+        loader = self._loader(dep, flags, tier, self._load_bw(servers))
+        worker_ids = [f"{name}/f{next(self._fid)}-s{i}"
+                      for i in range(n_stages)]
+        pending = [loader.admit_stage(n_stages, i, server_id=servers[i],
+                                      worker_id=worker_ids[i], now=now,
+                                      deadline=deadline)
+                   for i in range(n_stages)]
+        engine_kw = dict(max_batch=max_batch, max_seq=max_seq, paged=paged,
+                         prefix_cache=prefix_cache,
+                         prefill_chunk=prefill_chunk, policy=policy)
+        return PendingColdStart(name, dep, scheme, flags, pending,
+                                engine_kw)
+
+    def cold_start(self, name: str, **kw) -> ServingEndpoint:
         """Alg. 1 cold start, executed: pick a pipeline scheme, admit
         every stage's fetch into the shared schedule (stages landing on
         the same server contend per Alg. 2), stream each stage's
@@ -221,29 +316,9 @@ class ServerlessFrontend:
         ``WorkerTimeline`` report under ``flags``.
         ``prefix_cache``/``prefill_chunk``/``policy`` pass through to the
         engine (the first two need the paged layout) and survive
-        consolidation."""
-        dep = self._deployed[name]
-        scheme = self.controller.plan_cold_start(name, free_hbm, now,
-                                                 force_s=force_s)
-        n_stages = min(max(scheme.s, min_stages), dep.cfg.n_periods)
-        if n_stages == scheme.s:
-            servers = list(scheme.servers)
-        else:                       # min_stages overrode the plan's degree
-            pool = scheme.servers or tuple(self.servers)
-            servers = [pool[i % len(pool)] for i in range(n_stages)]
-        deadline = self.controller.fetch_deadline(name, scheme, now)
-        loader = self._loader(dep, flags, tier, self._load_bw(servers))
-        worker_ids = [f"{name}/f{next(self._fid)}-s{i}"
-                      for i in range(n_stages)]
-        stage_params, report = loader.load_group(
-            n_stages, servers=servers, now=now, worker_ids=worker_ids,
-            deadline=deadline, model_name=name)
-        eng = Engine(dep.cfg, stage_params, max_batch=max_batch,
-                     max_seq=max_seq, paged=paged,
-                     prefix_cache=prefix_cache, prefill_chunk=prefill_chunk,
-                     policy=policy)
-        return ServingEndpoint(eng, scheme=scheme,
-                               cold_start_timeline=report)
+        consolidation. (``begin_cold_start`` + ``finish`` split the same
+        operation for concurrent fleet launches.)"""
+        return self.begin_cold_start(name, **kw).finish()
 
     def full_params(self, name: str, *, now: float = 0.0,
                     server_id: Optional[str] = None,

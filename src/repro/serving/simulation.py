@@ -14,6 +14,13 @@ length, t_d per token, t_n per pipeline hop); fetch times come from the
 contention-aware fair-share NIC fluid model in cluster/cluster.py.
 Worker failures can be injected; recovery is a fresh (pipeline-parallel)
 cold start — see DESIGN.md §7.
+
+All *scaling decisions* — when to launch, how many groups, how long an
+idle worker survives, when to prewarm a reaped model, which models to
+proactively distribute — come from the shared ``FleetController``
+(repro/fleet/controller.py), the same policy object the real-JAX
+``FleetFrontend`` drives; this simulation is only a data plane executing
+its decisions on the discrete-event clock.
 """
 
 from __future__ import annotations
@@ -29,12 +36,12 @@ from repro.core.coldstart import OverlapFlags
 from repro.core.controller import CentralController
 from repro.core.parallelism import NoPlacement
 from repro.core.types import GB, ColdStartScheme, ModelProfile, ServerSpec
+from repro.fleet.controller import (FleetController, FleetPolicy,
+                                    LaunchPlan, PlacementAction)
 from repro.workloads.generator import ModelInstance, Request
 
-# Fallback when a ModelProfile carries no KV geometry
-# (ModelProfile.kv_bytes_per_token): Llama2-7B-class fp16 KV per token.
-KV_BYTES_PER_TOKEN = 512 * 1024
 BG_FETCH_WEIGHT = 0.5                # background (consolidation) fetch priority
+PLACEMENT_FETCH_WEIGHT = 0.1         # proactive-distribution seeding priority
 
 
 @dataclass
@@ -64,6 +71,8 @@ class Group:
     scheme: ColdStartScheme
     workers: List[Worker]
     mode: str                        # consolidation mode: 'down'|'up'|'none'
+    t0: float = 0.0                  # launch instant
+    reason: str = "demand"           # demand | prewarm
     ready: bool = False
     dissolved: bool = False
     active: List[Request] = field(default_factory=list)
@@ -90,7 +99,8 @@ class ServerlessSim:
                  consolidate: bool = True,
                  force_s: Optional[int] = None,
                  host_mem_bytes: int = 188 * GB,
-                 stage_bytes_fn: Optional[Callable] = None):
+                 stage_bytes_fn: Optional[Callable] = None,
+                 policy: Optional[FleetPolicy] = None):
         assert system in ("hydra", "vllm", "serverlessllm")
         self.system = system
         self.cache_enabled = cache_enabled or system == "serverlessllm"
@@ -100,8 +110,11 @@ class ServerlessSim:
             {s.server_id: s for s in servers},
             per_worker_capacity=max_batch,
             overlapped=(system == "hydra"))
+        # the one scaling-policy implementation, shared with the real
+        # FleetFrontend; ``keepalive_s`` remains the naive-policy shorthand
+        self.fleet = FleetController(
+            self.controller, policy or FleetPolicy(keepalive_s=keepalive_s))
         self.max_batch = max_batch
-        self.keepalive_s = keepalive_s
         self.consolidate = consolidate and system == "hydra"
         self.force_s = force_s
         self.stage_bytes_fn = stage_bytes_fn
@@ -112,6 +125,15 @@ class ServerlessSim:
             self.flags = OverlapFlags.all()
         else:
             self.flags = OverlapFlags.none()
+
+        for name, prof in profiles.items():
+            if prof.kv_bytes_per_token is None:
+                raise ValueError(
+                    f"profile {name!r} has no kv_bytes_per_token: KV"
+                    " migration accounting needs the real geometry — set"
+                    " ModelProfile.kv_bytes_per_token (see"
+                    " ModelProfile.kv_bytes_from_geometry or"
+                    " workloads.applications.kv_bytes_for)")
 
         self.instances = {i.name: i for i in instances}
         # every instance is its own model in the registry (its bytes must be
@@ -136,8 +158,11 @@ class ServerlessSim:
         self._gid = itertools.count()
         self.finished: List[Request] = []
         self.cold_start_log: List[dict] = []
+        self.placement_log: List[dict] = []
         self.failures_injected = 0
         self._retry_pending: set = set()
+        self._pulse_armed = False
+        self._pulse_until = 0.0
 
     # ================================================================ util
     def _profile(self, model: str) -> ModelProfile:
@@ -158,10 +183,8 @@ class ServerlessSim:
         return t.t_d * (s - w + w / s) + t.t_n * s
 
     def _kv_bytes_per_token(self, model: str) -> int:
-        """Per-model KV footprint from the profile's geometry; the
-        Llama2-7B-class constant when the profile lacks it."""
-        kv = self._profile(model).kv_bytes_per_token
-        return kv if kv is not None else KV_BYTES_PER_TOKEN
+        """Per-model KV footprint; registration guarantees the geometry."""
+        return self._profile(model).kv_bytes_per_token
 
     # ============================================================ requests
     def submit(self, requests: Sequence[Request]):
@@ -169,10 +192,65 @@ class ServerlessSim:
             self.sim.at(r.arrival, lambda r=r: self._arrive(r))
 
     def run(self, until: Optional[float] = None):
+        pol = self.fleet.policy
+        if until is not None and (pol.prewarm or pol.proactive_placement):
+            self._arm_pulses(until)
         self.sim.run(until=until)
 
+    # ------------------------------------------------------- control pulses
+    def _arm_pulses(self, until: float):
+        """Run the fleet control loop (placement rounds + prewarm checks)
+        at the policy's pulse cadence for the span of this ``run`` — the
+        sim's twin of ``FleetFrontend.advance``."""
+        self._pulse_until = max(self._pulse_until, until)
+        if self._pulse_armed:
+            return
+        pulse = max(self.fleet.policy.pulse_s, 1e-3)
+
+        def tick():
+            self._control_tick()
+            if self.sim.now + pulse <= self._pulse_until:
+                self.sim.after(pulse, tick)
+            else:
+                self._pulse_armed = False
+
+        self._pulse_armed = True
+        self.sim.after(pulse, tick)
+
+    def _control_tick(self):
+        now = self.sim.now
+        for act in self.fleet.placement_round(now):
+            self._seed_placement(act)
+        for plan in self.fleet.prewarm_due(now, self._at_zero):
+            self._execute_plan(plan.model, plan)
+
+    def _at_zero(self, model: str) -> bool:
+        return (not self.warm_workers[model] and not self.groups[model]
+                and not self.queues[model]
+                and self.provisioning[model] == 0)
+
+    def _seed_placement(self, act: PlacementAction):
+        """Execute one Alg. 1 proactive-distribution action: background-
+        fetch the model's bytes into the target server's host cache (low
+        priority on the NIC), so a later cold start there skips the
+        network fetch entirely."""
+        server = self.cluster.servers[act.server_id]
+        if server.cache_has(act.model):
+            return
+        prof = self._profile(act.model)
+        self.placement_log.append({"model": act.model,
+                                   "server": act.server_id,
+                                   "t": self.sim.now})
+        self.cluster.start_fetch(
+            act.server_id, prof.size_bytes,
+            lambda: server.cache_put(act.model, prof.size_bytes),
+            weight=PLACEMENT_FETCH_WEIGHT)
+
     def _arrive(self, req: Request):
-        self.controller.record_request(req.model, self.sim.now)
+        self.fleet.record_arrival(req.model, self.sim.now)
+        req.cold = not (self.warm_workers[req.model]
+                        or any(g.ready and not g.dissolved
+                               for g in self.groups[req.model]))
         self.queues[req.model].append(req)
         self._drain(req.model)
         self._maybe_cold_start(req.model)
@@ -239,7 +317,8 @@ class ServerlessSim:
     def _arm_keepalive(self, wkr: Worker):
         self._cancel_keepalive(wkr)
         wkr.keepalive_ev = self.sim.after(
-            self.keepalive_s, lambda: self._terminate_worker(wkr))
+            self.fleet.keepalive(wkr.model, self.sim.now),
+            lambda: self._terminate_worker(wkr))
 
     def _cancel_keepalive(self, wkr: Worker):
         if wkr.keepalive_ev is not None:
@@ -249,7 +328,8 @@ class ServerlessSim:
     def _arm_group_keepalive(self, grp: Group):
         self._cancel_group_keepalive(grp)
         grp.keepalive_ev = self.sim.after(
-            self.keepalive_s, lambda: self._terminate_group(grp))
+            self.fleet.keepalive(grp.model, self.sim.now),
+            lambda: self._terminate_group(grp))
 
     def _cancel_group_keepalive(self, grp: Group):
         if grp.keepalive_ev is not None:
@@ -289,25 +369,48 @@ class ServerlessSim:
         return cap
 
     def _maybe_cold_start(self, model: str):
-        qlen = len(self.queues[model])
-        if qlen == 0 or qlen <= self._capacity_in_flight(model):
-            return
+        current = len(self.warm_workers[model]) + sum(
+            1 for g in self.groups[model] if not g.dissolved)
+        plan = self.fleet.cold_start_plan(
+            model, len(self.queues[model]),
+            self._capacity_in_flight(model), current, self.sim.now)
+        if plan:
+            self._execute_plan(model, plan)
+
+    def _execute_plan(self, model: str, plan: LaunchPlan):
+        """Run one FleetController launch decision against the data plane
+        (with HBM-pressure eviction + retry on placement failure)."""
         try:
-            if self.system == "hydra":
-                self._cold_start_hydra(model)
-            else:
-                self._cold_start_baseline(model)
+            self._launch_plan(model, plan)
         except NoPlacement:
             if not self._evict_idle():
                 self._schedule_retry(model)
                 return
             try:
-                if self.system == "hydra":
-                    self._cold_start_hydra(model)
-                else:
-                    self._cold_start_baseline(model)
+                self._launch_plan(model, plan)
             except NoPlacement:
                 self._schedule_retry(model)
+
+    def _launch_plan(self, model: str, plan: LaunchPlan):
+        now = self.sim.now
+        if self.system != "hydra":
+            prof = self._profile(model)
+            sid = self._place_single(model, prof)
+            if sid is None:
+                raise NoPlacement(model)
+            scheme = ColdStartScheme(1, 1, (sid,), 0.0, prof.timings.t_d,
+                                     False)
+            self._launch_group(model, scheme, "none", reason=plan.reason)
+            return
+        mode = plan.mode if self.consolidate else "none"
+        # with consolidation off the data plane can't run scale-up groups;
+        # cap the fleet's burst sizing at one group (old behaviour)
+        n_groups = plan.n_groups if self.consolidate else 1
+        for _ in range(n_groups):
+            scheme = self.controller.plan_cold_start(
+                model, self.cluster.free_hbm(), now, force_s=self.force_s,
+                prefer=self.fleet.preferred_servers(model))
+            self._launch_group(model, scheme, mode, reason=plan.reason)
 
     def _evict_idle(self) -> bool:
         """HBM pressure relief: terminate one idle warm worker (LRU-ish) or
@@ -337,23 +440,9 @@ class ServerlessSim:
 
         self.sim.after(1.0, retry)
 
-    # --------------------------------------------------------------- hydra
-    def _cold_start_hydra(self, model: str):
-        now = self.sim.now
-        current = len(self.warm_workers[model]) + sum(
-            1 for g in self.groups[model] if not g.dissolved)
-        plan = self.controller.consolidation_plan(
-            model, len(self.queues[model]), now, current)
-        scheme = self.controller.plan_cold_start(
-            model, self.cluster.free_hbm(), now, force_s=self.force_s)
-        mode = plan.mode if self.consolidate else "none"
-        n_groups = max(1, len(plan.group_sizes)) if mode == "up" else 1
-        for _ in range(n_groups):
-            scheme = self.controller.plan_cold_start(
-                model, self.cluster.free_hbm(), now, force_s=self.force_s)
-            self._launch_group(model, scheme, mode)
-
-    def _launch_group(self, model: str, scheme: ColdStartScheme, mode: str):
+    # --------------------------------------------------------------- launch
+    def _launch_group(self, model: str, scheme: ColdStartScheme, mode: str,
+                      reason: str = "demand"):
         now = self.sim.now
         prof = self._profile(model)
         gid = next(self._gid)
@@ -379,7 +468,8 @@ class ServerlessSim:
         if not workers:
             self._schedule_retry(model)
             return
-        grp = Group(gid, model, scheme, workers, mode)
+        grp = Group(gid, model, scheme, workers, mode, t0=now,
+                    reason=reason)
         for wkr in workers:
             wkr.group = grp
         self.groups[model].append(grp)
@@ -409,7 +499,11 @@ class ServerlessSim:
         twin of this logic)."""
         server = self.cluster.servers[wkr.server_id]
         flags = self.flags
-        cached = self.cache_enabled and server.cache_has(wkr.model)
+        # a host-cache hit skips the network fetch — populated either by
+        # the serverlessllm-style cache or by Alg. 1 proactive placement
+        cached = (self.cache_enabled
+                  or self.fleet.policy.proactive_placement) \
+            and server.cache_has(wkr.model)
         load_seconds = nbytes / server.spec.pcie_bytes_per_s
 
         if flags.overlap_load:
@@ -471,7 +565,9 @@ class ServerlessSim:
         self.provisioning[grp.model] -= 1
         self.cold_start_log.append({
             "model": grp.model, "s": grp.s, "w": grp.w,
-            "ready": self.sim.now,
+            "t0": grp.t0, "ready": self.sim.now,
+            "duration": self.sim.now - grp.t0,
+            "reason": grp.reason,
             "predicted_ttft": grp.scheme.predicted_ttft,
         })
         if grp.s == 1:
@@ -620,15 +716,6 @@ class ServerlessSim:
             finish_at, lambda: self._complete_on_worker(wkr, req))
 
     # ============================================================ baseline
-    def _cold_start_baseline(self, model: str):
-        now = self.sim.now
-        prof = self._profile(model)
-        sid = self._place_single(model, prof)
-        if sid is None:
-            raise NoPlacement(model)
-        scheme = ColdStartScheme(1, 1, (sid,), 0.0, prof.timings.t_d, False)
-        self._launch_group(model, scheme, "none")
-
     def _place_single(self, model: str, prof: ModelProfile) -> Optional[str]:
         servers = self.cluster.servers
         if self.system == "serverlessllm":
@@ -680,12 +767,29 @@ class ServerlessSim:
         ttft_ok = sum(1 for r in done if r.ttft_ok())
         tpot_ok = sum(1 for r in done if r.tpot_ok())
         ttfts = sorted(r.ttft for r in done)
+        cold_ttfts = sorted(r.ttft for r in done if r.cold)
+        durs = sorted(c["duration"] for c in self.cold_start_log)
+
+        def pct(xs, q):
+            return xs[min(len(xs) - 1, int(len(xs) * q))] if xs else 0.0
+
         return {
             "n": len(done),
             "ttft_attainment": ttft_ok / len(done),
             "tpot_attainment": tpot_ok / len(done),
             "ttft_mean": sum(ttfts) / len(ttfts),
             "ttft_p50": ttfts[len(ttfts) // 2],
-            "ttft_p99": ttfts[min(len(ttfts) - 1, int(len(ttfts) * 0.99))],
+            "ttft_p99": pct(ttfts, 0.99),
             "cold_starts": len(self.cold_start_log),
+            # request-experienced cold-start latency: TTFT of requests that
+            # arrived with no ready endpoint (prewarming shrinks these)
+            "cold_requests": len(cold_ttfts),
+            "cold_p50": pct(cold_ttfts, 0.50),
+            "cold_p99": pct(cold_ttfts, 0.99),
+            # provisioning durations (proactive placement shrinks these)
+            "cold_start_p50": pct(durs, 0.50),
+            "cold_start_p99": pct(durs, 0.99),
+            "prewarms": sum(1 for c in self.cold_start_log
+                            if c["reason"] == "prewarm"),
+            "placements": len(self.placement_log),
         }

@@ -13,7 +13,7 @@ from repro.store.loader import (ColdStartReport, StageLoadRecord,
                                 StreamedStageLoader, TensorSpan)
 from repro.store.manifest import (ChunkRecord, Manifest, StageChunk,
                                   build_manifest, load_manifest, save_model)
-from repro.store.store import (DiskTier, FetchFlow, FetchSchedule,
+from repro.store.store import (AliasTier, DiskTier, FetchFlow, FetchSchedule,
                                MemoryTier, ModelStore, StoreTier)
 from repro.store.validate import (StageCrossCheck, assert_within,
                                   crosscheck_stages)
@@ -21,8 +21,8 @@ from repro.store.validate import (StageCrossCheck, assert_within,
 __all__ = [
     "ChunkRecord", "Manifest", "StageChunk", "build_manifest",
     "load_manifest", "save_model",
-    "DiskTier", "FetchFlow", "FetchSchedule", "MemoryTier", "ModelStore",
-    "StoreTier",
+    "AliasTier", "DiskTier", "FetchFlow", "FetchSchedule", "MemoryTier",
+    "ModelStore", "StoreTier",
     "ColdStartReport", "StageLoadRecord", "StreamedStageLoader",
     "TensorSpan",
     "StageCrossCheck", "assert_within", "crosscheck_stages",

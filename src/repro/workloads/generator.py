@@ -26,6 +26,9 @@ class Request:
     first_token: Optional[float] = None
     completion: Optional[float] = None
     tokens_done: int = 0
+    # arrived with no ready endpoint (experienced a cold start / queued
+    # behind one) — set by the serving system at admission
+    cold: Optional[bool] = None
 
     @property
     def ttft(self) -> Optional[float]:
@@ -109,3 +112,30 @@ def burst(instance: ModelInstance, n: int, at: float = 0.0) -> List[Request]:
                     instance.mean_prompt, instance.mean_output,
                     instance.slo_ttft, instance.slo_tpot)
             for i in range(n)]
+
+
+def periodic_bursts(instances: Sequence[ModelInstance], period: float,
+                    n_bursts: int, burst_size: int, *,
+                    stagger: float = 2.0, start: float = 1.0,
+                    jitter: float = 0.0, seed: int = 0) -> List[Request]:
+    """Recurring multi-model burst trace (the fleet benchmark's workload):
+    instance ``j`` bursts ``burst_size`` simultaneous requests at
+    ``start + j*stagger + k*period`` for ``k < n_bursts``, optionally
+    jittered. This is the serverless pattern HydraServe's predictive
+    prewarming targets — each model goes fully idle between bursts, so a
+    purely reactive fleet pays a cold start per episode."""
+    rng = np.random.default_rng(seed)
+    reqs: List[Request] = []
+    rid = 0
+    for k in range(n_bursts):
+        for j, inst in enumerate(instances):
+            at = start + j * stagger + k * period
+            if jitter > 0:
+                at = max(0.0, at + rng.normal(0.0, jitter))
+            for _ in range(burst_size):
+                reqs.append(Request(rid, inst.name, inst.app, at,
+                                    inst.mean_prompt, inst.mean_output,
+                                    inst.slo_ttft, inst.slo_tpot))
+                rid += 1
+    reqs.sort(key=lambda r: r.arrival)
+    return reqs

@@ -1,0 +1,294 @@
+"""Fleet control plane: shared policy units, Alg. 1 proactive
+distribution, and the real-JAX multi-model frontend (scale-to-zero,
+queued cold starts, cold-deploy, placement-accelerated launches)."""
+
+import jax
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.controller import CentralController
+from repro.core.types import (GB, Gbps, ModelProfile, ServerSpec, SLO,
+                              TimingProfile)
+from repro.fleet import FleetFrontend
+from repro.fleet.controller import FleetController, FleetPolicy
+from repro.models import build_model
+from repro.serving.simulation import ServerlessSim
+from repro.workloads.applications import (APPLICATIONS, WARM, kv_bytes_for,
+                                          timings_for)
+from repro.workloads.generator import make_instances, periodic_bursts
+
+T = TimingProfile(t_cc=0.2, t_l=0.2, t_cu=0.1)
+
+
+def _servers(n=2, nic=16 * Gbps, hbm=24 * GB):
+    return {f"s{i}": ServerSpec(f"s{i}", nic, 12e9, hbm, 1)
+            for i in range(n)}
+
+
+def _central(n=2, **kw):
+    return CentralController(_servers(n), **kw)
+
+
+def _profile(name="m", size=4 * GB, max_pp=4):
+    return ModelProfile(name, size, T, SLO(10.0, 0.5), max_pp=max_pp,
+                        kv_bytes_per_token=1024)
+
+
+def _burst(fc, model, at, n=3, gap=0.5):
+    for k in range(n):
+        fc.record_arrival(model, at + k * gap)
+
+
+# ====================================================== policy decisions
+def test_episode_period_learning():
+    fc = FleetController(_central(), FleetPolicy.proactive())
+    for t0 in (0.0, 100.0, 200.0):
+        _burst(fc, "m", t0)
+    # two full inter-episode spans of 100 s -> next burst predicted at 300
+    assert fc.predicted_next_episode("m", 210.0) == pytest.approx(300.0)
+    # missed predictions roll whole periods forward, never trailing `now`
+    assert fc.predicted_next_episode("m", 310.0) == pytest.approx(400.0)
+    assert fc.predicted_next_episode("none", 10.0) is None
+
+
+def test_keepalive_delayed_downscale():
+    naive = FleetController(_central(), FleetPolicy.naive(keepalive_s=30.0))
+    naive.record_arrival("m", 0.0)
+    assert naive.keepalive("m", 5.0) == 30.0
+
+    fc = FleetController(_central(), FleetPolicy.proactive(
+        keepalive_s=30.0, downscale_extend_s=60.0))
+    fc.record_arrival("m", 0.0)
+    # predictor still sees demand inside its window -> full extension
+    assert fc.keepalive("m", 5.0) == 90.0
+    # window drained, no episode period yet -> back to the base reap
+    assert fc.keepalive("m", 500.0) == 30.0
+
+
+def test_keepalive_stretches_to_predicted_episode():
+    fc = FleetController(_central(), FleetPolicy.proactive(
+        keepalive_s=10.0, downscale_extend_s=100.0))
+    for t0 in (0.0, 60.0):
+        _burst(fc, "m", t0)
+    # at t=100 the next episode is predicted at 120: the idle window must
+    # cover the 20 s gap (plus a pulse) even though the predictor's
+    # trailing window is empty by then... but never beyond the cap
+    assert fc.keepalive("m", 100.0) >= 20.0
+    assert fc.keepalive("m", 100.0) <= 110.0
+
+
+def test_prewarm_fires_once_then_goes_stale():
+    fc = FleetController(_central(), FleetPolicy.proactive(
+        prewarm_lead_s=10.0))
+    for t0 in (0.0, 100.0, 200.0):
+        _burst(fc, "m", t0)
+    at_zero = lambda m: True
+    assert fc.prewarm_due(280.0, at_zero) == []       # before the window
+    plans = fc.prewarm_due(292.0, at_zero)            # inside nxt - lead
+    assert len(plans) == 1 and plans[0].model == "m" \
+        and plans[0].reason == "prewarm"
+    # one prewarm per predicted episode
+    assert fc.prewarm_due(293.0, at_zero) == []
+    # the predicted episode never arrived: past 1.5 periods of silence
+    # the pattern is stale and prewarming stops
+    assert fc.prewarm_due(392.0, at_zero) == []
+
+
+def test_prewarm_respects_at_zero():
+    fc = FleetController(_central(), FleetPolicy.proactive(
+        prewarm_lead_s=10.0))
+    for t0 in (0.0, 100.0):
+        _burst(fc, "m", t0)
+    assert fc.prewarm_due(195.0, lambda m: False) == []
+
+
+def test_cold_start_plan_gates_on_capacity():
+    c = _central()
+    c.register_model(_profile())
+    fc = FleetController(c, FleetPolicy.naive())
+    assert not fc.cold_start_plan("m", 0, 0, 0, 1.0)
+    assert not fc.cold_start_plan("m", 4, 8, 1, 1.0)   # covered in flight
+    plan = fc.cold_start_plan("m", 5, 0, 0, 1.0)
+    assert plan and plan.n_groups >= 1 and plan.reason == "demand"
+
+
+def test_demand_rank_orders_hottest_first():
+    fc = FleetController(_central(), FleetPolicy.proactive())
+    _burst(fc, "cold", 0.0, n=1)
+    _burst(fc, "hot", 0.0, n=8)
+    rank = fc.demand_rank(1.0)
+    assert rank.index("hot") < rank.index("cold")
+
+
+# ============================================== Alg. 1 model distribution
+def test_plan_distribution_fanout_and_skip_seeded():
+    servers = {
+        "fat": ServerSpec("fat", 32 * Gbps, 12e9, 24 * GB, 1),
+        "mid": ServerSpec("mid", 16 * Gbps, 12e9, 24 * GB, 1),
+        "thin": ServerSpec("thin", 8 * Gbps, 12e9, 24 * GB, 1),
+    }
+    c = CentralController(servers)
+    new = c.plan_distribution(["a"], fanout=2)
+    # fattest NICs first
+    assert new == [("a", "fat"), ("a", "mid")]
+    for m, sid in new:
+        c.record_placement(m, sid)
+    # already-seeded pairs are skipped; load balancing spreads the rest
+    new2 = c.plan_distribution(["a", "b"], fanout=3)
+    assert ("a", "thin") in new2 and ("a", "fat") not in new2
+    assert {sid for m, sid in new2 if m == "b"} == set(servers)
+
+
+def test_plan_cold_start_prefers_seeded_servers():
+    c = _central(4)
+    c.register_model(_profile(max_pp=2))
+    scheme = c.plan_cold_start("m", prefer=["s2", "s3"])
+    assert set(scheme.servers) <= {"s2", "s3"}
+    # infeasible preferred pool falls back to the open cluster
+    tiny = {"s0": ServerSpec("s0", 16 * Gbps, 12e9, 24 * GB, 1),
+            "s1": ServerSpec("s1", 16 * Gbps, 12e9, 1, 1)}
+    c2 = CentralController(tiny)
+    c2.register_model(_profile(max_pp=1))
+    scheme2 = c2.plan_cold_start("m", prefer=["s1"])
+    assert scheme2.servers == ("s0",)
+
+
+# ================================================== sim integration (DES)
+def _fleet_sim(policy):
+    servers = [ServerSpec(f"a10-{i}", 16 * Gbps, 12e9, 24 * GB, 1)
+               for i in range(4)]
+    profiles = {n: ModelProfile(n, w.size_bytes, timings_for(n),
+                                SLO(7.5, 0.2),
+                                kv_bytes_per_token=kv_bytes_for(n))
+                for n, w in WARM.items()}
+    insts = make_instances(APPLICATIONS[:2], 2)
+    sim = ServerlessSim(servers, profiles, insts, system="hydra",
+                        keepalive_s=20.0, policy=policy)
+    reqs = periodic_bursts(insts, 90.0, 4, 2, stagger=3.0, seed=1)
+    sim.submit(reqs)
+    sim.run(until=90.0 * 6)
+    m = sim.metrics()
+    assert m["n"] == len(reqs)
+    return m
+
+
+def test_sim_proactive_policy_prewarms_and_improves():
+    naive = _fleet_sim(FleetPolicy.naive(keepalive_s=20.0))
+    pro = _fleet_sim(FleetPolicy.proactive(
+        keepalive_s=20.0, downscale_extend_s=30.0,
+        placement_interval_s=20.0))
+    assert naive["prewarms"] == 0 and naive["placements"] == 0
+    assert pro["prewarms"] > 0 and pro["placements"] > 0
+    assert pro["cold_requests"] < naive["cold_requests"]
+
+
+# ========================================== real-JAX fleet frontend
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return ModelConfig(name="fleet-tiny", family="dense", n_layers=2,
+                       d_model=32, n_heads=4, n_kv_heads=4, d_ff=64,
+                       vocab=128, dtype="float32", max_pp=2)
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tiny_cfg):
+    return build_model(tiny_cfg).init(jax.random.PRNGKey(0))
+
+
+def _fleet(policy, n_servers=2, nic=10 * Gbps, **kw):
+    servers = [ServerSpec(f"s{i}", nic, 12e9, 2 * GB, 1)
+               for i in range(n_servers)]
+    return FleetFrontend(servers, policy, **kw)
+
+
+def _register(ff, name, cfg, params=None, size=2 * 1024 * 1024, **kw):
+    prof = ModelProfile(name, size, T, SLO(10.0, 0.5), max_pp=2,
+                        kv_bytes_per_token=256)
+    return ff.register(cfg, prof, params=params, max_batch=2, max_seq=64,
+                       **kw)
+
+
+def test_fleet_scale_to_zero_bit_exact(tiny_cfg, tiny_params):
+    ff = _fleet(FleetPolicy.naive(keepalive_s=15.0))
+    for i in range(2):
+        _register(ff, f"m{i}", tiny_cfg, tiny_params)
+    trace = [(f"m{i}", t, [3 + i, 5, 7]) for i in range(2)
+             for t in (0.0, 60.0)]
+    reqs = ff.run_trace(trace, drain_to=110.0)
+    first = {r.model: r.output for r in reqs if r.arrival == 0.0}
+    for r in reqs:
+        assert r.output, f"{r.model}@{r.arrival} never served"
+        if r.arrival == 60.0:
+            assert r.output == first[r.model], "re-warm diverged"
+    # both bursts were cold (the 15 s keepalive reaped between them) and
+    # the pool is back at zero after the final drain
+    assert ff.metrics()["cold_starts"] == 4
+    assert all(not mm.slots for mm in ff.models.values())
+
+
+def test_fleet_queued_requests_flush_at_ready(tiny_cfg, tiny_params):
+    ff = _fleet(FleetPolicy.naive(keepalive_s=30.0))
+    _register(ff, "m0", tiny_cfg, tiny_params)
+    r1 = ff.submit("m0", [3, 5], now=0.0)
+    # second request lands mid cold start: it must queue, not relaunch
+    dur = ff.cold_start_log[0]["duration"]
+    assert dur > 0.1
+    r2 = ff.submit("m0", [3, 5], now=dur / 2)
+    assert len(ff.cold_start_log) == 1
+    assert r1.cold and r2.cold
+    ff.advance(dur + 1.0)                   # endpoint ready: queue flushes
+    assert r1.wait == pytest.approx(dur, rel=0.1)
+    assert r2.wait == pytest.approx(dur / 2, rel=0.2)
+    assert r2.output == r1.output
+
+
+def test_fleet_concurrent_cold_starts_contend(tiny_cfg, tiny_params):
+    """Two models launched the same instant on a small pool finish later
+    than a model launched alone: their stage fetches share NICs."""
+    nic = 1e5          # thin NIC: the fetch dominates and must be shared
+    solo = _fleet(FleetPolicy.naive(), n_servers=1, nic=nic)
+    _register(solo, "m0", tiny_cfg, tiny_params)
+    solo.run_trace([("m0", 0.0, [3, 5])])
+    alone = solo.cold_start_log[0]["duration"]
+
+    both = _fleet(FleetPolicy.naive(), n_servers=1, nic=nic)
+    for i in range(2):
+        _register(both, f"m{i}", tiny_cfg, tiny_params)
+    both.run_trace([("m0", 0.0, [3, 5]), ("m1", 0.0, [4, 6])])
+    durs = sorted(c["duration"] for c in both.cold_start_log)
+    assert len(durs) == 2
+    assert durs[-1] > alone * 1.2   # the shared NIC slowed someone down
+
+
+def test_fleet_cold_deploy_from_disk(tiny_cfg, tiny_params, tmp_path):
+    from repro.store.store import ModelStore
+    m = build_model(tiny_cfg)
+    ModelStore.save(str(tmp_path), m, tiny_params,
+                    peer_bw=None, remote_bw=None)
+
+    live = _fleet(FleetPolicy.naive())
+    _register(live, "m0", tiny_cfg, tiny_params)
+    a = live.run_trace([("m0", 0.0, [3, 5, 7])])
+
+    cold = _fleet(FleetPolicy.naive())
+    _register(cold, "m0", tiny_cfg, params=None, store_dir=str(tmp_path))
+    b = cold.run_trace([("m0", 0.0, [3, 5, 7])])
+    assert b[0].output == a[0].output   # no live tree ever touched
+
+
+def test_fleet_placement_accelerates_cold_start(tiny_cfg, tiny_params):
+    """After an Alg. 1 placement round the next cold start fetches from
+    the placed fast tier instead of the slow source registry."""
+    policy = FleetPolicy(keepalive_s=5.0, proactive_placement=True,
+                         placement_interval_s=10.0, placement_top_k=2)
+    ff = _fleet(policy, source_bw=1e4, placement_bw=1e9)
+    _register(ff, "m0", tiny_cfg, tiny_params)
+    ff.submit("m0", [3, 5], now=0.0)        # slow cold start, seeds demand
+    slow = ff.cold_start_log[0]
+    ff.advance(slow["ready"] + 20.0)        # placement round + reap
+    assert ff.placement_log, "placement round never ran"
+    assert not ff.models["m0"].slots
+    ff.submit("m0", [3, 5], now=ff.now)
+    fast = ff.cold_start_log[-1]
+    assert fast["tier"] == policy.placement_tier
+    assert fast["duration"] < slow["duration"] / 10

@@ -4,7 +4,8 @@ import pytest
 
 from repro.core.types import GB, Gbps, ModelProfile, ServerSpec, SLO
 from repro.serving.simulation import ServerlessSim
-from repro.workloads.applications import APPLICATIONS, WARM, timings_for
+from repro.workloads.applications import (APPLICATIONS, WARM, kv_bytes_for,
+                                          timings_for)
 from repro.workloads.generator import burst, generate, make_instances
 
 
@@ -16,7 +17,8 @@ def servers():
 
 
 def profiles():
-    return {n: ModelProfile(n, w.size_bytes, timings_for(n), SLO(7.5, 0.2))
+    return {n: ModelProfile(n, w.size_bytes, timings_for(n), SLO(7.5, 0.2),
+                            kv_bytes_per_token=kv_bytes_for(n))
             for n, w in WARM.items()}
 
 

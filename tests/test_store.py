@@ -306,3 +306,115 @@ def test_full_params_roundtrip(model_and_params, tmp_path):
     front = ServerlessFrontend(_servers())
     front.deploy(m.cfg, params, _profile(m.cfg), store_dir=str(tmp_path))
     _trees_equal(front.full_params(m.cfg.name), params)
+
+
+# ==================================== fleet-scale fairness (N cold starts)
+def test_n_concurrent_cold_starts_fair_share_closed_form():
+    """N stage fetches admitted together on one NIC: fair sharing gives
+    the closed-form staggered completions — smallest first, each later
+    flow's finish advanced by the bandwidth the finished ones free."""
+    B = 2e9
+    sizes = [1e9, 2e9, 4e9, 8e9]
+    sched = FetchSchedule.single(B, server_id="s0")
+    flows = [sched.admit("s0", f"w{i}", s, now=0.0)
+             for i, s in enumerate(sizes)]
+    for f in flows:
+        sched.resolve(f)
+    t, prev, n = 0.0, 0.0, len(sizes)
+    for k, (f, s) in enumerate(zip(flows, sizes)):
+        t += (n - k) * (s - prev) / B
+        assert f.end == pytest.approx(t)
+        prev = s
+    # completion order is deterministic and by size
+    assert [f.end for f in flows] == sorted(f.end for f in flows)
+    # byte conservation: the link stays saturated until the last byte,
+    # so the last completion is exactly total-bytes / bandwidth
+    assert flows[-1].end == pytest.approx(sum(sizes) / B)
+    # per-flow conservation via the measured arrival profile
+    for f, s in zip(flows, sizes):
+        assert f.time_at_bytes(0) == pytest.approx(0.0)
+        assert f.time_at_bytes(s) == pytest.approx(f.end)
+
+
+def test_fair_share_independent_of_admit_order():
+    """Admission order within one instant must not change anyone's
+    completion (the fluid model depends on state, not call order)."""
+    B = 4e9
+    sizes = [3e9, 1e9, 2e9]
+
+    def ends(order):
+        sched = FetchSchedule.single(B, server_id="s0")
+        flows = {}
+        for i in order:
+            flows[i] = sched.admit("s0", f"w{i}", sizes[i], now=0.0)
+        for i in sorted(flows):
+            sched.resolve(flows[i])
+        return [flows[i].end for i in range(len(sizes))]
+
+    a = ends([0, 1, 2])
+    b = ends([2, 0, 1])
+    for x, y in zip(a, b):
+        assert x == pytest.approx(y)
+
+
+def test_flows_on_distinct_servers_do_not_contend():
+    from repro.core.placement import ContentionTracker
+    B = 2e9
+    specs = {f"s{i}": ServerSpec(f"s{i}", B, 12e9, 1024 * GB)
+             for i in range(3)}
+    sched = FetchSchedule(ContentionTracker(specs))
+    flows = [sched.admit(f"s{i}", f"w{i}", 2e9, now=0.0) for i in range(3)]
+    for f in flows:
+        sched.resolve(f)
+        assert f.end == pytest.approx(1.0)   # each alone on its own NIC
+
+
+# ========================================== tier placement (Alg. 1 seeds)
+def test_place_alias_tier_reads_identical(model_and_params, tmp_path):
+    """A proactive placement serves the exact same bytes — only the
+    simulated transfer bandwidth differs."""
+    m, params = model_and_params
+    store = ModelStore.save(str(tmp_path), m, params,
+                            peer_bw=None, remote_bw=None)
+    placed = store.place("seed", 256 * Gbps)   # faster than local PCIe
+    assert store.has_tier("seed")
+    assert store.fastest_tier() is placed
+    assert store.tier(None) is placed        # fastest-first ordering
+    plan = store.stage_plan(1, 0)
+    for sc in plan[:4]:
+        a = store.tier("local").read(sc.chunk, 0, sc.length)
+        b = store.tier("seed").read(sc.chunk, 0, sc.length)
+        assert a == b
+
+
+def test_place_retunes_and_drop_rules(model_and_params, tmp_path):
+    m, params = model_and_params
+    store = ModelStore.save(str(tmp_path), m, params,
+                            peer_bw=None, remote_bw=None)
+    t1 = store.place("seed", 1e9)
+    t2 = store.place("seed", 8e9)            # re-place retunes in place
+    assert t1 is t2 and t2.bandwidth == 8e9
+    with pytest.raises(ValueError):
+        store.drop_tier("local")             # still backs the placement
+    store.drop_tier("seed")
+    assert not store.has_tier("seed")
+    with pytest.raises(ValueError):
+        store.drop_tier("local")             # never drop the only tier
+
+
+def test_placed_tier_speeds_up_fetch(model_and_params, tmp_path):
+    """The loader fetching from a placed fast tier beats the slow
+    authoritative tier (cap binds below the NIC fair share)."""
+    m, params = model_and_params
+    store = ModelStore.save(str(tmp_path), m, params,
+                            local_bw=1e6, peer_bw=None, remote_bw=None)
+    store.place("seed", 1e9)
+
+    def fetch_span(tier):
+        loader = StreamedStageLoader(store, FetchSchedule.single(16 * Gbps),
+                                     T, load_bytes_per_s=12e9, tier=tier)
+        _, rec = loader.load_stage(1, 0, worker_id=f"pt-{tier}")
+        s = rec.timeline.spans["fetch"]
+        return s[1] - s[0]
+
+    assert fetch_span("seed") < fetch_span("local") / 100

@@ -12,7 +12,8 @@ from repro.serving.api import SamplingParams
 from repro.serving.endpoint import ServingEndpoint
 from repro.serving.engine import Engine
 from repro.serving.simulation import ServerlessSim
-from repro.workloads.applications import APPLICATIONS, WARM, timings_for
+from repro.workloads.applications import (APPLICATIONS, WARM, kv_bytes_for,
+                                          timings_for)
 from repro.workloads.generator import burst, generate, make_instances
 
 
@@ -24,7 +25,8 @@ def servers():
 
 
 def profiles():
-    return {n: ModelProfile(n, w.size_bytes, timings_for(n), SLO(7.5, 0.2))
+    return {n: ModelProfile(n, w.size_bytes, timings_for(n), SLO(7.5, 0.2),
+                            kv_bytes_per_token=kv_bytes_for(n))
             for n, w in WARM.items()}
 
 

@@ -52,16 +52,19 @@ def test_burst():
 
 
 def test_kv_bytes_per_token_from_geometry():
-    """Per-model KV footprint replaces the simulation's hardcoded
-    constant: llama2-7b's geometry reproduces it exactly, 13B exceeds
-    it, and a geometry-less profile falls back to the constant."""
+    """Per-model KV footprint comes from the real geometry — llama2-7b's
+    reproduces the 512 KiB/token constant the simulation used to
+    hardcode, 13B exceeds it — and a geometry-less profile is now a loud
+    registration error instead of a silent fallback."""
+    import pytest
+
     from repro.core.types import GB, ModelProfile, ServerSpec, SLO
-    from repro.serving.simulation import KV_BYTES_PER_TOKEN, ServerlessSim
+    from repro.serving.simulation import ServerlessSim
     from repro.workloads.applications import WARM, kv_bytes_for, timings_for
 
-    assert kv_bytes_for("llama2-7b") == KV_BYTES_PER_TOKEN == 512 * 1024
+    assert kv_bytes_for("llama2-7b") == 512 * 1024
     assert kv_bytes_for("llama2-13b") == 2 * 40 * 40 * 128 * 2
-    assert kv_bytes_for("llama2-13b") > KV_BYTES_PER_TOKEN
+    assert kv_bytes_for("llama2-13b") > kv_bytes_for("llama2-7b")
 
     servers = [ServerSpec("s0", 2e9, 12e9, 64 * GB, 1)]
     insts = make_instances(APPLICATIONS, 2)
@@ -69,8 +72,13 @@ def test_kv_bytes_per_token_from_geometry():
         n, w.size_bytes, timings_for(n), SLO(7.5, 0.2),
         kv_bytes_per_token=None if n == "opt-6.7b" else kv_bytes_for(n))
         for n, w in WARM.items()}
-    sim = ServerlessSim(servers, profiles, insts)
+    with pytest.raises(ValueError, match="kv_bytes_per_token"):
+        ServerlessSim(servers, profiles, insts)
+
+    good = {n: ModelProfile(n, w.size_bytes, timings_for(n), SLO(7.5, 0.2),
+                            kv_bytes_per_token=kv_bytes_for(n))
+            for n, w in WARM.items()}
+    sim = ServerlessSim(servers, good, insts)
     for inst in insts:
-        want = KV_BYTES_PER_TOKEN if inst.base_model == "opt-6.7b" \
-            else kv_bytes_for(inst.base_model)
-        assert sim._kv_bytes_per_token(inst.name) == want
+        assert sim._kv_bytes_per_token(inst.name) == \
+            kv_bytes_for(inst.base_model)
