@@ -41,6 +41,7 @@ from repro.core.types import ModelProfile, ServerSpec
 from repro.fleet.controller import (FleetController, FleetPolicy,
                                     LaunchPlan)
 from repro.models import build_model
+from repro.router import KVBlockStore, Router
 from repro.serving.api import SamplingParams
 from repro.serving.endpoint import (PendingColdStart, ServerlessFrontend,
                                     ServingEndpoint)
@@ -62,6 +63,10 @@ class FleetRequest:
     slo_ok: Optional[bool] = None
     cold: bool = False                  # arrived with no ready endpoint
     output: Optional[List[int]] = None  # generated token ids (real engine)
+    replica: Optional[str] = None       # routed endpoint (KV-aware router)
+    cached_tokens: int = 0              # prompt prefix served from KV cache
+    restored_tokens: int = 0            # ...of which restored from a tier
+    restore_seconds: float = 0.0        # modeled restore transfer time
 
 
 @dataclass
@@ -73,6 +78,7 @@ class _Slot:
     reason: str                         # demand | prewarm
     idle_since: Optional[float] = None
     consolidated: bool = False
+    name: str = ""                      # stable replica id (router key)
 
 
 @dataclass
@@ -84,6 +90,9 @@ class ManagedModel:
     engine_kw: dict
     slots: List[_Slot] = field(default_factory=list)
     queue: Deque[FleetRequest] = field(default_factory=collections.deque)
+    router: Optional[Router] = None     # KV-aware replica routing, if on
+    kv_tier: Optional[KVBlockStore] = None   # shared spill/restore tiers
+    n_launched: int = 0                 # replica name counter
 
     @property
     def state(self) -> str:
@@ -131,13 +140,24 @@ class FleetFrontend:
                  params: Optional[dict] = None,
                  store: Optional[ModelStore] = None,
                  store_dir: Optional[str] = None,
+                 routing: Optional[str] = None,
+                 kv_tier_blocks: Optional[int] = None,
+                 routing_kw: Optional[dict] = None,
                  **engine_kw) -> ManagedModel:
         """Register a model with the fleet, starting at zero replicas.
         ``params`` chunks the live tree behind a ``source_bw``-limited
         tier (the 'remote registry' a never-distributed model fetches
         from); ``store``/``store_dir`` follow ``ServerlessFrontend.deploy``
         — including the cold-deploy path (``params=None`` with an
-        existing on-disk store)."""
+        existing on-disk store).
+
+        ``routing`` turns on the KV-aware routing subsystem for this
+        model: a per-model ``Router`` (policy name or instance,
+        ``routing_kw`` forwarded to it) over a shared ``KVBlockStore``
+        whose host tier holds at most ``kv_tier_blocks`` live blocks
+        (``None`` = unbounded) before demoting to the segment tier.
+        Routed models are forced paged + prefix-cached so evicted
+        blocks spill instead of vanishing."""
         if store is None and params is not None and store_dir is None:
             store = ModelStore.from_params(build_model(cfg), params,
                                            bandwidth=self.source_bw)
@@ -145,6 +165,16 @@ class FleetFrontend:
                                      store_dir=store_dir)
         base = min(store.tiers, key=lambda t: t.bandwidth).name
         mm = ManagedModel(profile.name, cfg, profile, base, dict(engine_kw))
+        if routing is not None:
+            server0 = next(iter(self.frontend.servers), "local")
+            mm.kv_tier = KVBlockStore(
+                self.frontend.schedule, server0,
+                host_capacity_blocks=kv_tier_blocks)
+            mm.router = Router(routing, kv_tier=mm.kv_tier,
+                               **(routing_kw or {}))
+            mm.engine_kw.setdefault("paged", True)
+            mm.engine_kw.setdefault("prefix_cache", True)
+            mm.engine_kw["kv_tier"] = mm.kv_tier
         self.models[profile.name] = mm
         return mm
 
@@ -223,6 +253,18 @@ class FleetFrontend:
             self.advance(drain_to)
         return out
 
+    def scale_to(self, model: str, n: int,
+                 now: Optional[float] = None) -> ManagedModel:
+        """Launch demand replicas until ``model`` has ``n`` slots (never
+        scales down — the keepalive reaper owns that). Handy for benches
+        that want a fixed replica fan before driving a trace."""
+        now = self.now if now is None else max(now, self.now)
+        self.now = now
+        mm = self.models[model]
+        while len(mm.slots) < n:
+            self._launch([LaunchPlan(model, 1, "none", "demand")], now)
+        return mm
+
     # ---------------------------------------------------------- internals
     def _capacity(self, mm: ManagedModel) -> int:
         cap = self.central.consolidation.per_worker_capacity
@@ -250,8 +292,13 @@ class FleetFrontend:
         mm = self.models[plan.model]
         ep = p.finish()
         ready = ep.cold_start_timeline.ready
-        slot = _Slot(ep, ready, plan.mode, plan.reason, idle_since=ready)
+        slot = _Slot(ep, ready, plan.mode, plan.reason, idle_since=ready,
+                     name=f"{plan.model}/r{mm.n_launched}")
+        mm.n_launched += 1
         mm.slots.append(slot)
+        if mm.router is not None:
+            mm.router.register(slot.name, ep)
+            mm.router.set_pending(slot.name, ready > now)
         self.cold_start_log.append({
             "model": plan.model, "t0": now, "ready": ready,
             "duration": ready - now, "reason": plan.reason,
@@ -276,26 +323,58 @@ class FleetFrontend:
 
     def _flush(self, now: float):
         """Feed queued requests into ready endpoints and run the real
-        engines to completion."""
+        engines to completion. Router-enabled models pick the replica by
+        policy (warm-prefix affinity, saturation overflow) and their
+        TTFT estimate discounts the analytic prefill by the measured
+        cached fraction, then adds the measured KV-restore transfer."""
         for mm in self.models.values():
             ready = mm.ready_slots(now)
             if not ready or not mm.queue:
                 continue
+            if mm.kv_tier is not None:
+                mm.kv_tier.now = now
+            if mm.router is not None:
+                for slot in mm.slots:
+                    mm.router.set_pending(slot.name, slot.ready_at > now)
             while mm.queue:
                 req = mm.queue.popleft()
-                slot = min(ready, key=lambda s: len(s.endpoint.active()))
+                slot = self._pick_slot(mm, ready, req)
                 handle = slot.endpoint.submit(req.prompt, req.params)
                 served_at = max(slot.ready_at, req.arrival)
                 req.wait = served_at - req.arrival
-                req.ttft = req.wait + self._prefill_est(mm, slot)
-                req.slo_ok = req.ttft <= mm.profile.slo.ttft + 1e-9
+                req.replica = slot.name or None
                 slot.idle_since = None
                 slot.endpoint.run()
                 req.output = list(handle.generated)
+                est = self._prefill_est(mm, slot)
+                if mm.router is not None:
+                    # routed models prorate the analytic prefill per
+                    # *uncached* token (t_p = full-context prefill), so
+                    # the KV the router preserved shows up in TTFT; the
+                    # measured restore transfer is paid on top
+                    m = handle.metrics
+                    req.cached_tokens = m.cached_tokens
+                    req.restored_tokens = m.restored_tokens
+                    req.restore_seconds = m.restore_seconds
+                    ctx = slot.endpoint.engine.max_seq
+                    uncached = max(0, len(req.prompt) - m.cached_tokens)
+                    est = est * uncached / max(ctx, 1) + m.restore_seconds
+                req.ttft = req.wait + est
+                req.slo_ok = req.ttft <= mm.profile.slo.ttft + 1e-9
             for slot in ready:
                 if not slot.endpoint.has_work() \
                         and slot.idle_since is None:
                     slot.idle_since = now
+
+    def _pick_slot(self, mm: ManagedModel, ready: List[_Slot],
+                   req: FleetRequest) -> _Slot:
+        if mm.router is not None and len(ready) > 0:
+            decision = mm.router.route(req.prompt)
+            for slot in ready:
+                if slot.name == decision.name:
+                    return slot
+            # routed to a still-pending replica: serve on a ready one
+        return min(ready, key=lambda s: len(s.endpoint.active()))
 
     def _prefill_est(self, mm: ManagedModel, slot: _Slot) -> float:
         t = mm.profile.timings
@@ -333,6 +412,15 @@ class FleetFrontend:
                 if (idle is not None and slot.ready_at <= t
                         and not slot.endpoint.has_work()
                         and t - max(idle, slot.ready_at) >= keep):
+                    if mm.kv_tier is not None:
+                        # scale-to-zero demotes the replica's whole prefix
+                        # cache to the host tier (evict hooks spill) so
+                        # the next cold start can restore it
+                        mm.kv_tier.now = t
+                        slot.endpoint.engine.block_mgr \
+                            .drop_unreferenced_cache()
+                    if mm.router is not None and slot.name:
+                        mm.router.unregister(slot.name)
                     slot.endpoint.engine.retire()
                 else:
                     survivors.append(slot)
@@ -366,4 +454,26 @@ class FleetFrontend:
             "prewarms": sum(1 for c in self.cold_start_log
                             if c["reason"] == "prewarm"),
             "placements": len(self.placement_log),
+            "per_model": {name: self._model_metrics(mm)
+                          for name, mm in self.models.items()},
         }
+
+    def _model_metrics(self, mm: ManagedModel) -> dict:
+        done = [r for r in self.requests
+                if r.model == mm.name and r.ttft is not None]
+        out = {
+            "state": mm.state,
+            "replicas": [s.name or f"{mm.name}/?" for s in mm.slots],
+            "n": len(done),
+            "endpoints": {s.name or str(i): s.endpoint.stats()
+                          for i, s in enumerate(mm.slots)},
+        }
+        if mm.router is not None:
+            prompt_tokens = sum(len(r.prompt) for r in done)
+            out["router"] = mm.router.stats()
+            out["kv_tier"] = mm.kv_tier.stats()
+            out["cached_tokens"] = sum(r.cached_tokens for r in done)
+            out["restored_tokens"] = sum(r.restored_tokens for r in done)
+            out["cached_ratio"] = (out["cached_tokens"] / prompt_tokens
+                                   if prompt_tokens else 0.0)
+        return out

@@ -80,6 +80,10 @@ class RequestMetrics:
     how much of the resume was served from the retained prefix blocks);
     ``preemptions`` counts how many times the scheduler evicted this
     request from its slot to make room for higher-value work.
+    ``restored_tokens`` is the part of ``cached_tokens`` that was not in
+    HBM at admission but restored from a lower KV tier
+    (router/kvtier.py); ``restore_seconds`` is the modeled wall time of
+    those transfers on the contention-fair ``FetchSchedule``.
     """
     submit_step: int = 0
     admit_step: Optional[int] = None      # step of the first token
@@ -87,6 +91,8 @@ class RequestMetrics:
     decode_steps: int = 0                 # decode passes it took part in
     n_tokens: int = 0                     # tokens emitted so far
     cached_tokens: int = 0                # prompt tokens hit in prefix cache
+    restored_tokens: int = 0              # ...restored from a lower KV tier
+    restore_seconds: float = 0.0          # modeled restore transfer time
     preemptions: int = 0                  # times evicted from a slot
     last_token_step: Optional[int] = None  # step of the latest token
 

@@ -95,6 +95,12 @@ class ServingEndpoint:
         use this (not ``active() or queue``) to drive a step loop."""
         return self._engine.has_work()
 
+    def stats(self) -> dict:
+        """Cheap saturation snapshot of the live engine (waiting depth,
+        free slots/blocks, preemptions...) — the KV-aware router's
+        overflow input; survives engine swaps."""
+        return self._engine.stats()
+
     def submit(self, prompt: Sequence[int],
                params: Union[SamplingParams, int, None] = None, *,
                max_new: Optional[int] = None,
@@ -250,10 +256,12 @@ class ServerlessFrontend:
                          free_hbm: Optional[Dict[str, int]] = None,
                          force_s: Optional[int] = None, min_stages: int = 1,
                          max_batch: int = 4, max_seq: int = 128,
+                         block_size: int = 16,
                          paged: Optional[bool] = None,
                          prefix_cache: bool = False,
                          prefill_chunk: Optional[int] = None,
                          policy: str = "fcfs",
+                         kv_tier=None,
                          flags: OverlapFlags = OverlapFlags.all(),
                          tier: Optional[str] = None,
                          fallback_tier: Optional[str] = None,
@@ -301,9 +309,11 @@ class ServerlessFrontend:
                                       worker_id=worker_ids[i], now=now,
                                       deadline=deadline)
                    for i in range(n_stages)]
-        engine_kw = dict(max_batch=max_batch, max_seq=max_seq, paged=paged,
+        engine_kw = dict(max_batch=max_batch, max_seq=max_seq,
+                         block_size=block_size, paged=paged,
                          prefix_cache=prefix_cache,
-                         prefill_chunk=prefill_chunk, policy=policy)
+                         prefill_chunk=prefill_chunk, policy=policy,
+                         kv_tier=kv_tier)
         return PendingColdStart(name, dep, scheme, flags, pending,
                                 engine_kw)
 

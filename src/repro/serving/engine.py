@@ -95,7 +95,8 @@ class Engine:
                  block_size: int = 16, paged: Optional[bool] = None,
                  prefix_cache: bool = False,
                  prefill_chunk: Optional[int] = None,
-                 policy: Union[str, SchedulingPolicy] = "fcfs"):
+                 policy: Union[str, SchedulingPolicy] = "fcfs",
+                 kv_tier=None):
         self.cfg = cfg
         self.model = Model(cfg)
         if paged is None:
@@ -133,6 +134,56 @@ class Engine:
         self.retired = False
         self.last_migration_bytes: Optional[int] = None
         self._step_prefill_tokens: int = 0
+        # multi-tier KV (router/kvtier.py): LRU-evicted cached blocks
+        # spill HBM -> host tier and are restored on a later prefix hit
+        self.kv_tier = kv_tier
+        self._spill_hook = None
+        if kv_tier is not None:
+            if not prefix_cache:
+                raise ValueError("kv_tier needs prefix_cache=True: spilled "
+                                 "blocks are content-addressed by chain "
+                                 "hash")
+            self.block_mgr.kv_tier = kv_tier
+            self._install_spill_hook()
+
+    # -------------------------------------------------- multi-tier KV
+    def _install_spill_hook(self):
+        """Catch BlockManager evictions: read the page content (the hook
+        fires before the block id is reused) and spill it to the host
+        tier. The closure binds THIS engine's runner — a consolidation
+        successor must rebind (``consolidated`` does)."""
+
+        def _spill(blk: int, h: bytes):
+            self.kv_tier.put(h, self.runner.read_pages(blk))
+
+        self._spill_hook = _spill
+        self.block_mgr.evict_hooks.append(_spill)
+
+    def _remove_spill_hook(self):
+        if self._spill_hook is not None:
+            try:
+                self.block_mgr.evict_hooks.remove(self._spill_hook)
+            except ValueError:
+                pass
+            self._spill_hook = None
+
+    def _apply_restores(self, admitted):
+        """Write spilled page bytes back into the worker pools for every
+        host-tier restore the last allocation queued, charging the
+        measured transfer to the (single) admitted request. Must run
+        before ``_apply_copies``: a COW source may itself be a restored
+        block."""
+        pending = self.block_mgr.drain_restores()
+        if not pending:
+            return
+        assert self.kv_tier is not None
+        seconds = 0.0
+        for h, dst in pending:
+            payload, flow = self.kv_tier.take(h)
+            self.runner.write_pages(dst, payload)
+            seconds += flow.seconds
+        for req in admitted:              # at most one per ScheduleBatch
+            req.metrics.restore_seconds += seconds
 
     # ------------------------------------------------------- delegation
     @property
@@ -162,6 +213,26 @@ class Engine:
         ``active() or queue`` misses the preempted pool: a preempted
         request is in neither until it is re-admitted.)"""
         return self.scheduler.has_work()
+
+    def stats(self) -> dict:
+        """Cheap saturation snapshot — the router's overflow input and a
+        fleet-bench observable. Pure reads, no compute."""
+        self._check_live()
+        bm = self.block_mgr
+        return {
+            "waiting": len(self.scheduler.waiting),
+            "preempted": len(self.scheduler.preempted),
+            "running": len(self.active()),
+            "slots": self.max_batch,
+            "free_slots": sum(s is None for s in self.scheduler.slots),
+            "free_blocks": bm.free_blocks,
+            "total_blocks": bm.n_blocks,
+            "cached_blocks": bm.n_cached,
+            "preemptions": self.scheduler.n_preemptions,
+            "evictions": bm.evictions,
+            "restores": bm.restores,
+            "steps": self.steps,
+        }
 
     def _check_live(self):
         if self.retired:
@@ -292,6 +363,7 @@ class Engine:
             for req in plan.admitted:
                 self.runner.set_row(req.slot,
                                     self.block_mgr.tables[req.rid].blocks)
+            self._apply_restores(plan.admitted)
             self._apply_copies()
             for pa in plan.prefills:
                 self._exec_prefill(pa, events)
@@ -425,6 +497,16 @@ class Engine:
         eng._rid = self._rid
         eng.finished = self.finished
         eng.steps = self.steps            # keep step metrics continuous
+        if self.kv_tier is not None:
+            # the shared BlockManager carries the hook list across the
+            # swap, but our hook closes over the runner being retired —
+            # rebind the spill path to the successor. (The cold cached
+            # pages dropped above already spilled through OUR runner,
+            # which was still live — a consolidation demotes the prefix
+            # cache to the host tier instead of discarding it.)
+            self._remove_spill_hook()
+            eng.kv_tier = self.kv_tier
+            eng._install_spill_hook()
         return eng
 
     def scale_up(self, full_params: dict) -> List["Engine"]:
@@ -438,7 +520,8 @@ class Engine:
                                  paged=self.paged,
                                  prefix_cache=self.prefix_cache,
                                  prefill_chunk=self.prefill_chunk,
-                                 policy=self.scheduler.policy))
+                                 policy=self.scheduler.policy,
+                                 kv_tier=self.kv_tier))
         return [first] + others
 
     def retire(self):
@@ -448,5 +531,6 @@ class Engine:
         worker caches so any stale use raises (``_check_live``) instead of
         silently corrupting block tables it no longer owns."""
         self.retired = True
+        self._remove_spill_hook()         # closure binds the dead runner
         self.scheduler.clear()
         self.runner.retire()

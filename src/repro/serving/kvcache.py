@@ -36,6 +36,25 @@ a half-prefilled request never exposes garbage pages to other requests.
 ``blocks_of`` / ``migration_bytes`` are dedup-aware: a block shared by
 several in-flight requests is reported (and shipped by §6.2
 consolidation) exactly once.
+
+**Notifications** (``commit_hooks`` / ``evict_hooks``): every index
+mutation is observable. A commit hook fires when a chain hash enters the
+index (engine commit or host-tier restore); an evict hook fires when one
+leaves it (LRU eviction in ``_take_block``, consolidation's
+``drop_unreferenced_cache``) — *before* the block id is handed out for
+reuse, so a listener can still read the page content (the engine's
+HBM→host KV spill) or drop the hash from an external residency index
+(the router's per-replica warm-prefix map) without ever going stale.
+
+**Multi-tier restore** (``kv_tier``): when a lower KV tier is attached
+(see repro/router/kvtier.py), ``allocate``'s prefix match does not stop
+at the first HBM index miss — a chain block whose hash the tier holds is
+assigned a *fresh* block, registered in the index, and queued on
+``pending_restores``; the engine drains the queue
+(``Engine._apply_restores``) by copying the spilled page bytes back into
+the worker pools and accounting the transfer as a measured flow. A
+restored block is indistinguishable from a committed one afterwards:
+prefill skips it, followers share it, eviction spills it again.
 """
 
 from __future__ import annotations
@@ -43,7 +62,7 @@ from __future__ import annotations
 import hashlib
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -62,6 +81,7 @@ class BlockTable:
     length: int = 0                  # tokens written
     tokens: Optional[List[int]] = None   # token-id chain (None: not hashable)
     cached_tokens: int = 0           # prefix tokens served from the cache
+    restored_tokens: int = 0         # ...of which came from a lower KV tier
     _n_hashed: int = 0               # full blocks whose chain hash is known
     _chain: bytes = b""              # running chain hash over those blocks
 
@@ -81,11 +101,30 @@ class BlockManager:
         self._hash_of: Dict[int, bytes] = {}     # block id -> chain hash
         self._cached: "OrderedDict[int, None]" = OrderedDict()  # LRU, ref==0
         self.pending_copies: List[Tuple[int, int]] = []  # COW (src, dst)
+        # index-mutation notifications: fired with (block_id, chain_hash)
+        # when a hash enters / leaves the index. Evict hooks fire BEFORE
+        # the block id is reused, while its page content is still intact.
+        self.commit_hooks: List[Callable[[int, bytes], None]] = []
+        self.evict_hooks: List[Callable[[int, bytes], None]] = []
+        # lower KV tier consulted by allocate's prefix match (duck-typed:
+        # needs only .has(hash)); restores queued for the engine to apply
+        self.kv_tier = None
+        self.pending_restores: List[Tuple[bytes, int]] = []  # (hash, dst)
         # stats
         self.cache_queries = 0
         self.cache_hit_tokens = 0
         self.evictions = 0
+        self.restores = 0
         self.preempt_releases = 0
+
+    # ------------------------------------------------------ notifications
+    def _fire_commit(self, blk: int, h: bytes):
+        for cb in self.commit_hooks:
+            cb(blk, h)
+
+    def _fire_evict(self, blk: int, h: bytes):
+        for cb in self.evict_hooks:
+            cb(blk, h)
 
     # ------------------------------------------------------------ alloc
     def blocks_needed(self, n_tokens: int) -> int:
@@ -100,13 +139,17 @@ class BlockManager:
 
     def _take_block(self) -> int:
         """Pop a free block, evicting the LRU cached (refcount-zero)
-        block when the free list is dry. Callers check ``free_blocks``."""
+        block when the free list is dry. Callers check ``free_blocks``.
+        The evict hooks fire before the block id is returned — the page
+        content is still intact when listeners (KV spill, residency
+        index) observe the eviction."""
         if self._free:
             return self._free.pop()
         blk, _ = self._cached.popitem(last=False)      # least recently used
         h = self._hash_of.pop(blk)
         if self._index.get(h) == blk:
             del self._index[h]
+            self._fire_evict(blk, h)
         self.evictions += 1
         return blk
 
@@ -137,10 +180,19 @@ class BlockManager:
         many prompt tokens need no prefill compute. A fully-cached prompt
         is capped at ``n_tokens - 1`` and the block holding the final
         token is copied-on-write (see ``drain_copies``).
+
+        With a ``kv_tier`` attached the match keeps walking past HBM
+        misses: a chain block the tier holds is *restored* — it takes a
+        fresh block (registered in the index immediately; the engine
+        writes the spilled bytes before anything reads them) and counts
+        toward ``cached_tokens`` (``BlockTable.restored_tokens`` says how
+        much of that prefix rode the transfer network instead of HBM).
         """
         t = BlockTable(request_id,
                        tokens=list(tokens) if tokens is not None else None)
-        shared: List[int] = []
+        # matched chain prefix: (hash, block-or-None); None = host restore
+        matched: List[Tuple[bytes, Optional[int]]] = []
+        n_hbm = 0
         chain = b""
         if self.prefix_cache and tokens is not None:
             assert len(tokens) >= n_tokens, "token chain shorter than prompt"
@@ -150,37 +202,57 @@ class BlockManager:
                 h = _chain_hash(h, tokens[i * self.block_size:
                                           (i + 1) * self.block_size])
                 blk = self._index.get(h)
-                if blk is None:
+                if blk is None and not (self.kv_tier is not None
+                                        and self.kv_tier.has(h)):
                     break
-                shared.append(blk)
+                matched.append((h, blk))
+                n_hbm += blk is not None
                 chain = h
         # always recompute >= 1 prompt token (the engine samples from the
         # last prefill logit), so a full-prompt hit is capped at n-1
-        cached = min(len(shared) * self.block_size, max(n_tokens - 1, 0))
-        for blk in shared:
-            self._ref_block(blk)
-        cow = cached < len(shared) * self.block_size
-        # fresh blocks: the suffix, plus a private copy of the COW block
-        need = self.blocks_needed(n_tokens) - len(shared) + (1 if cow else 0)
+        cached = min(len(matched) * self.block_size, max(n_tokens - 1, 0))
+        # ref the HBM prefix first: a resident matched block must not be
+        # LRU-evicted by the _take_block calls that follow
+        for h, blk in matched:
+            if blk is not None:
+                self._ref_block(blk)
+        cow = cached < len(matched) * self.block_size
+        # fresh blocks: restored prefix blocks + the suffix, plus a
+        # private copy of the COW block
+        need = self.blocks_needed(n_tokens) - n_hbm + (1 if cow else 0)
         if len(self._free) + len(self._cached) < need:
-            for blk in shared:                # roll back the prefix refs
-                self._unref_block(blk)
+            for h, blk in matched:            # roll back the prefix refs
+                if blk is not None:
+                    self._unref_block(blk)
             raise MemoryError("out of KV blocks")
-        blocks = list(shared)
+        blocks: List[int] = []
+        for h, blk in matched:
+            if blk is None:                   # host-tier restore
+                blk = self._take_block()
+                self._ref[blk] += 1
+                self._index[h] = blk
+                self._hash_of[blk] = h
+                self.pending_restores.append((h, blk))
+                self.restores += 1
+                self._fire_commit(blk, h)
+                t.restored_tokens += self.block_size
+            else:
+                pass                          # already ref'd above
+            blocks.append(blk)
         if cow:
             src = blocks.pop()                # stays pinned via its ref
             dst = self._take_block()
             self._ref[dst] += 1
             self.pending_copies.append((src, dst))
             blocks.append(dst)
-        for _ in range(need - (1 if cow else 0)):
+        for _ in range(self.blocks_needed(n_tokens) - len(matched)):
             blk = self._take_block()
             self._ref[blk] += 1
             blocks.append(blk)
         t.blocks = blocks
         t.length = n_tokens
         t.cached_tokens = cached
-        t._n_hashed = len(shared)             # chain covers the COW block too
+        t._n_hashed = len(matched)            # chain covers the COW block too
         t._chain = chain
         self.cache_hit_tokens += cached
         self.tables[request_id] = t
@@ -194,6 +266,15 @@ class BlockManager:
         out, self.pending_copies = self.pending_copies, []
         for src, _ in out:
             self._unref_block(src)
+        return out
+
+    def drain_restores(self) -> List[Tuple[bytes, int]]:
+        """Hand the engine the pending ``(chain_hash, dst_block)`` host-
+        tier restores queued by ``allocate``. The caller must write the
+        spilled page bytes into the worker pools before anything reads
+        the blocks — and before ``drain_copies`` is applied, since a COW
+        source may itself be a restored block."""
+        out, self.pending_restores = self.pending_restores, []
         return out
 
     def extend(self, request_id: int, n_tokens: int = 1,
@@ -234,6 +315,7 @@ class BlockManager:
             if h not in self._index:          # first writer wins; duplicate
                 self._index[h] = blk          # content is simply unshared
                 self._hash_of[blk] = h
+                self._fire_commit(blk, h)
             t._chain = h
             t._n_hashed += 1
 
@@ -273,8 +355,9 @@ class BlockManager:
         pool."""
         for blk in self._cached:
             h = self._hash_of.pop(blk, None)
-            if h is not None:
-                self._index.pop(h, None)
+            if h is not None and self._index.get(h) == blk:
+                del self._index[h]
+                self._fire_evict(blk, h)
             self._free.append(blk)
         self._cached.clear()
 
@@ -305,6 +388,11 @@ class BlockManager:
     def n_cached(self) -> int:
         """Refcount-zero blocks currently held by the prefix cache."""
         return len(self._cached)
+
+    def indexed_hashes(self) -> List[bytes]:
+        """Chain hashes currently registered in the prefix index — the
+        ground truth an external residency index must mirror."""
+        return list(self._index)
 
     def refcount(self, block: int) -> int:
         return self._ref[block]

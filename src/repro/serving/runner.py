@@ -145,6 +145,39 @@ class ModelRunner:
         for w in self.workers:
             w.copy_pages(src, dst)
 
+    def read_pages(self, blk: int):
+        """One block's KV across the whole model, as a pipeline-shape
+        independent payload: ordered (cache_slot_name, k, v) triples whose
+        page arrays are concatenated over the stages along the period
+        axis — a payload read from a 2-stage engine writes back into its
+        consolidated 1-stage successor (or any same-model replica)
+        unchanged."""
+        out = []
+        for name, sub in self.workers[0].cache.items():
+            if "k_pages" not in sub:
+                continue
+            ks, vs = [], []
+            for w in self.workers:
+                k, v = w.read_page(name, blk)
+                ks.append(k)
+                vs.append(v)
+            out.append((name, np.concatenate(ks, axis=0),
+                        np.concatenate(vs, axis=0)))
+        return out
+
+    def write_pages(self, blk: int, payload):
+        """Scatter a spilled block's payload (see ``read_pages``) back
+        into the stage pools, splitting the period axis by each stage's
+        share."""
+        for name, k, v in payload:
+            off = 0
+            for w in self.workers:
+                p = w.cache[name]["k_pages"].shape[0]
+                w.write_page(name, blk, k[off:off + p], v[off:off + p])
+                off += p
+            assert off == k.shape[0], \
+                f"payload periods {k.shape[0]} != pipeline periods {off}"
+
     def clear_slot(self, slot: int):
         """Zero a vacated slot's recurrent state on every stage."""
         for w in self.workers:

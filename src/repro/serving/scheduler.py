@@ -339,6 +339,7 @@ class Scheduler:
         req.prefill_upto = target
         req.prefilled = table.cached_tokens
         req.metrics.cached_tokens = table.cached_tokens
+        req.metrics.restored_tokens = table.restored_tokens
 
     def _victim_pool(self) -> List[GenRequest]:
         """Residents eligible for preemption: fully prefilled (a mid-

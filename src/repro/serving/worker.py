@@ -19,6 +19,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer
@@ -160,6 +161,25 @@ class StageWorker:
         self.cache = {name: ({leaf: cp(arr) for leaf, arr in sub.items()}
                              if "k_pages" in sub else sub)
                       for name, sub in self.cache.items()}
+
+    def read_page(self, name: str, blk: int):
+        """Host copies of one attention pool's page ``blk``: (k, v) numpy
+        arrays of shape (P_stage, page_size, Hkv, hd). Used by the KV
+        spill hook at eviction time, while the page content is intact."""
+        sub = self.cache[name]
+        return (np.asarray(sub["k_pages"][:, blk]),
+                np.asarray(sub["v_pages"][:, blk]))
+
+    def write_page(self, name: str, blk: int, k, v):
+        """Write one page's K/V back into an attention pool — the restore
+        half of the HBM → host KV spill (router/kvtier.py)."""
+        sub = self.cache[name]
+        self.cache[name] = {
+            "k_pages": sub["k_pages"].at[:, blk].set(
+                jnp.asarray(k, sub["k_pages"].dtype)),
+            "v_pages": sub["v_pages"].at[:, blk].set(
+                jnp.asarray(v, sub["v_pages"].dtype)),
+        }
 
     def retire(self):
         """Drop the cache and params so a retired engine's stale worker

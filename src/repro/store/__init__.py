@@ -6,9 +6,13 @@
 ``loader``    — ``StreamedStageLoader``: materializes stage params
                 tensor-by-tensor with a measured ``WorkerTimeline``;
 ``validate``  — measured-vs-analytic cross-checks (fig8/fig9
-                ``--real-loader``, CI smoke, tests).
+                ``--real-loader``, CI smoke, tests);
+``kvsegment`` — serialized KV *segment* tier: the bottom of the
+                multi-tier KV cache (HBM → host → store), backing the
+                router's ``KVBlockStore`` overflow.
 """
 
+from repro.store.kvsegment import KVSegmentStore
 from repro.store.loader import (ColdStartReport, StageLoadRecord,
                                 StreamedStageLoader, TensorSpan)
 from repro.store.manifest import (ChunkRecord, Manifest, StageChunk,
@@ -24,6 +28,6 @@ __all__ = [
     "AliasTier", "DiskTier", "FetchFlow", "FetchSchedule", "MemoryTier",
     "ModelStore", "StoreTier",
     "ColdStartReport", "StageLoadRecord", "StreamedStageLoader",
-    "TensorSpan",
+    "TensorSpan", "KVSegmentStore",
     "StageCrossCheck", "assert_within", "crosscheck_stages",
 ]

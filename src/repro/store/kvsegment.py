@@ -1,0 +1,89 @@
+"""Content-addressed KV *segment* tier — the bottom of the multi-tier
+KV cache (HBM page pool → host tier → segment store).
+
+The host tier (repro/router/kvtier.py ``KVBlockStore``) holds spilled
+pages as live numpy arrays under a bounded block budget; when it
+overflows, the LRU entry is *demoted* here. This tier is the KV
+analogue of the model ``ModelStore``: payloads are **serialized** to raw
+bytes (the same ``tobytes`` round trip the model chunk store uses, so a
+segment surviving a demote/restore cycle is bit-exact by construction)
+and reads are charged at the tier's configured bandwidth — typically the
+remote/registry class, an order of magnitude under the host tier's PCIe
+class — on the same contention-fair ``FetchSchedule`` as every other
+transfer in the system.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.store.store import REMOTE_BW
+
+__all__ = ["KVSegmentStore"]
+
+
+class KVSegmentStore:
+    """Serialized KV segments keyed by block-chain hash.
+
+    A *segment* is one spilled KV block's payload: an ordered list of
+    ``(cache_slot_name, k_pages, v_pages)`` triples covering every
+    attention period of the model (pipeline-shape independent — see
+    ``KVBlockStore``). ``put`` serializes the arrays; ``get``
+    reconstructs them bit-exactly. Transfer-time accounting belongs to
+    the caller (``KVBlockStore`` charges ``bytes_of`` at
+    ``bandwidth``)."""
+
+    def __init__(self, bandwidth: float = REMOTE_BW):
+        self.bandwidth = float(bandwidth)
+        # hash -> list of (name, (k bytes, v bytes), dtype str, shape)
+        self._segs: Dict[bytes, List[Tuple[str, Tuple[bytes, bytes],
+                                           str, Tuple[int, ...]]]] = {}
+        self._nbytes: Dict[bytes, int] = {}
+
+    # --------------------------------------------------------------- api
+    def has(self, h: bytes) -> bool:
+        return h in self._segs
+
+    def __len__(self) -> int:
+        return len(self._segs)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self._nbytes.values())
+
+    def bytes_of(self, h: bytes) -> int:
+        return self._nbytes[h]
+
+    def put(self, h: bytes, payload: List[Tuple[str, np.ndarray,
+                                                np.ndarray]]):
+        seg = []
+        nbytes = 0
+        for name, k, v in payload:
+            k = np.ascontiguousarray(k)
+            v = np.ascontiguousarray(v)
+            assert k.shape == v.shape and k.dtype == v.dtype
+            seg.append((name, (k.tobytes(), v.tobytes()),
+                        str(k.dtype), k.shape))
+            nbytes += k.nbytes + v.nbytes
+        self._segs[h] = seg
+        self._nbytes[h] = nbytes
+
+    def get(self, h: bytes) -> List[Tuple[str, np.ndarray, np.ndarray]]:
+        out = []
+        for name, (kb, vb), dtype, shape in self._segs[h]:
+            k = np.frombuffer(kb, dtype=dtype).reshape(shape)
+            v = np.frombuffer(vb, dtype=dtype).reshape(shape)
+            out.append((name, k, v))
+        return out
+
+    def pop(self, h: bytes) -> List[Tuple[str, np.ndarray, np.ndarray]]:
+        out = self.get(h)
+        del self._segs[h]
+        del self._nbytes[h]
+        return out
+
+    def discard(self, h: Optional[bytes]):
+        self._segs.pop(h, None)
+        self._nbytes.pop(h, None)

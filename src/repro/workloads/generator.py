@@ -29,6 +29,12 @@ class Request:
     # arrived with no ready endpoint (experienced a cold start / queued
     # behind one) — set by the serving system at admission
     cold: Optional[bool] = None
+    # multi-turn conversations (the KV-aware router's workload): turns of
+    # one session share a growing prompt prefix, so routing them to the
+    # replica holding the session's KV blocks skips most of the prefill
+    session: Optional[int] = None
+    turn: int = 0
+    prompt_ids: Optional[List[int]] = None   # concrete ids, when generated
 
     @property
     def ttft(self) -> Optional[float]:
@@ -103,6 +109,50 @@ def generate(instances: Sequence[ModelInstance], rps: float, cv: float,
                             min(prompt, 16384), min(output, 4096),
                             inst.slo_ttft, inst.slo_tpot))
         rid += 1
+    return reqs
+
+
+def multi_turn_sessions(instance: ModelInstance, n_sessions: int,
+                        turns: int, *, first_prompt: int = 32,
+                        turn_tokens: int = 16, vocab: int = 512,
+                        session_rps: float = 0.5, think_s: float = 2.0,
+                        cv: float = 1.0, seed: int = 0) -> List[Request]:
+    """K-turn chat sessions against one model instance — the workload a
+    KV-aware router wins on. Each session opens with ``first_prompt``
+    random tokens; every later turn *re-sends the full conversation so
+    far* plus ``turn_tokens`` fresh ones, so turn ``k``'s prompt is a
+    strict prefix-extension of turn ``k-1``'s and the shared prefix
+    grows with the conversation. Sessions open with Gamma(CV) arrivals
+    at ``session_rps``; turns within a session are spaced by an
+    exponential think time with mean ``think_s``.
+
+    Token ids are sampled uniformly from ``[0, vocab)`` — keep ``vocab``
+    at/below the serving model's vocabulary (ids past it index nothing
+    and poison the KV cache with NaNs on any engine). ``prompt_ids``
+    carries the concrete ids; ``session``/``turn`` label the
+    conversation."""
+    rng = np.random.default_rng(seed)
+    shape = 1.0 / (cv * cv)
+    scale = (1.0 / session_rps) / shape
+    reqs: List[Request] = []
+    rid = 0
+    t_open = 0.0
+    for s in range(n_sessions):
+        t_open += rng.gamma(shape, scale)
+        history = [int(x) for x in rng.integers(0, vocab, first_prompt)]
+        t = t_open
+        for k in range(turns):
+            if k > 0:
+                t += rng.exponential(think_s)
+                history = history + [int(x) for x in
+                                     rng.integers(0, vocab, turn_tokens)]
+            reqs.append(Request(rid, instance.name, instance.app, t,
+                                len(history), instance.mean_output,
+                                instance.slo_ttft, instance.slo_tpot,
+                                session=s, turn=k,
+                                prompt_ids=list(history)))
+            rid += 1
+    reqs.sort(key=lambda r: (r.arrival, r.req_id))
     return reqs
 
 

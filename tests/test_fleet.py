@@ -292,3 +292,82 @@ def test_fleet_placement_accelerates_cold_start(tiny_cfg, tiny_params):
     fast = ff.cold_start_log[-1]
     assert fast["tier"] == policy.placement_tier
     assert fast["duration"] < slow["duration"] / 10
+
+
+# ====================================== KV-aware routing (repro/router/)
+def _session_trace(n_sessions=3, turns=3, vocab=128):
+    """Growing-prefix multi-turn prompts (in-vocab token ids)."""
+    out = []
+    for s in range(n_sessions):
+        base = [(s * 17 + j) % vocab for j in range(16)]
+        for k in range(turns):
+            out.append(base + [(s * 31 + 7 * k + j) % vocab
+                               for j in range(8 * k)])
+    return out
+
+
+def _routed_fleet(tiny_cfg, tiny_params, routing, n_replicas):
+    from repro.serving.api import SamplingParams
+    ff = _fleet(FleetPolicy.naive(keepalive_s=1e6))
+    _register(ff, "m0", tiny_cfg, tiny_params, block_size=8,
+              routing=routing)
+    ff.scale_to("m0", n_replicas, now=0.0)
+    mm = ff.models["m0"]
+    t = max(s.ready_at for s in mm.slots) + 1.0
+    reqs = []
+    for prompt in _session_trace():
+        reqs.append(ff.submit("m0", prompt, SamplingParams(max_new=3),
+                              now=t))
+        t += 0.5
+    ff.advance(t + 5.0)
+    return ff, reqs
+
+
+def test_fleet_routed_outputs_bit_exact_and_affinity_wins(tiny_cfg,
+                                                          tiny_params):
+    """The routed replica never changes the decoded tokens, and warm-
+    prefix affinity strictly beats round-robin on cached tokens (and
+    therefore TTFT p99) on a multi-turn session trace."""
+    ref_ff, ref = _routed_fleet(tiny_cfg, tiny_params, "kv_affinity", 1)
+    rr_ff, rr = _routed_fleet(tiny_cfg, tiny_params, "round_robin", 2)
+    aff_ff, aff = _routed_fleet(tiny_cfg, tiny_params, "kv_affinity", 2)
+    want = [r.output for r in ref]
+    assert [r.output for r in rr] == want
+    assert [r.output for r in aff] == want
+    assert all(r.replica for r in aff)
+    rr_m = rr_ff.metrics()["per_model"]["m0"]
+    aff_m = aff_ff.metrics()["per_model"]["m0"]
+    assert aff_m["cached_tokens"] > rr_m["cached_tokens"]
+    assert aff_m["cached_ratio"] > rr_m["cached_ratio"]
+    p99 = lambda reqs: sorted(r.ttft for r in reqs)[-1]
+    assert p99(aff) < p99(rr)
+    # per-model metrics expose the router + tier sections
+    assert aff_m["router"]["policy"] == "kv_affinity"
+    assert aff_m["router"]["decisions"] == len(aff)
+    assert set(aff_m["endpoints"]) == {"m0/r0", "m0/r1"}
+    assert "host_blocks" in aff_m["kv_tier"]
+
+
+def test_fleet_scale_to_zero_spills_and_restores(tiny_cfg, tiny_params):
+    """Reaping a routed model demotes its prefix cache to the host tier;
+    the next cold start restores it instead of re-prefilling, bit-exact
+    with the first pass."""
+    from repro.serving.api import SamplingParams
+    ff = _fleet(FleetPolicy.naive(keepalive_s=1e6))
+    _register(ff, "m0", tiny_cfg, tiny_params, block_size=8,
+              routing="kv_affinity")
+    ff.scale_to("m0", 1, now=0.0)
+    mm = ff.models["m0"]
+    ready = max(s.ready_at for s in mm.slots)
+    P = list(range(1, 17))
+    r1 = ff.submit("m0", P, SamplingParams(max_new=4), now=ready + 1.0)
+    ff.fleet.policy.keepalive_s = 1.0       # now let the reaper run
+    ff.advance(ready + 400.0)
+    assert not mm.slots, "keepalive reap never fired"
+    assert mm.kv_tier.host_blocks > 0       # cache spilled, not discarded
+    r2 = ff.submit("m0", P, SamplingParams(max_new=4), now=ready + 500.0)
+    ff.advance(ready + 900.0)
+    assert r2.output == r1.output
+    assert r2.restored_tokens > 0
+    assert r2.restore_seconds > 0.0
+    assert mm.kv_tier.restores > 0

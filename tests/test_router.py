@@ -1,0 +1,407 @@
+"""KV-aware routing subsystem (repro/router/).
+
+Four layers of guarantees:
+  * eviction notifications — ``BlockManager`` fires ``evict_hooks``
+    *synchronously at* eviction, before the freed block id can be
+    reused, so a spill hook reads the page bytes the evicted chain hash
+    actually names (the silent-eviction regression);
+  * residency — ``ResidencyIndex`` mirrors each engine's prefix index
+    exactly under churn, eviction and consolidation, and its
+    ``match()`` agrees with what an allocation would find;
+  * spill/restore — refcount-zero evicted blocks round-trip through the
+    host and segment tiers bit-exactly, into the same engine or a
+    different replica of the model, with the transfer accounted as a
+    measured flow;
+  * routing — policy units (affinity beats round-robin on multi-turn
+    sessions, saturation overflows to least-loaded) and the fleet-level
+    invariant that the routed replica never changes the decoded tokens.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model
+from repro.router import (KVAffinityPolicy, KVBlockStore, LeastLoadedPolicy,
+                          ReplicaView, ResidencyIndex, RoundRobinPolicy,
+                          Router, make_routing_policy)
+from repro.serving.api import SamplingParams
+from repro.serving.engine import Engine
+from repro.serving.kvcache import BlockManager
+
+VOCAB = 128
+PREFIX = list(range(1, 17))                      # 2 blocks at block_size=8
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ModelConfig(name="router-tiny", family="dense", n_layers=2,
+                      d_model=32, n_heads=4, n_kv_heads=4, d_ff=64,
+                      vocab=VOCAB, dtype="float32", max_pp=2)
+    return cfg, build_model(cfg).init(jax.random.PRNGKey(0))
+
+
+def _engine(cfg, stage_params, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("paged", True)
+    kw.setdefault("prefix_cache", True)
+    return Engine(cfg, stage_params, **kw)
+
+
+def _churn(eng, seed, n=1):
+    """Distinct throwaway prompts that push the LRU cache out."""
+    for i in range(n):
+        q = [(seed + 13 * i + j) % VOCAB for j in range(24)]
+        eng.submit(q, SamplingParams(max_new=2))
+        eng.run()
+
+
+# ---------------------------------------------------------------------------
+# BlockManager notifications (the silent-eviction regression)
+# ---------------------------------------------------------------------------
+
+def test_evict_hook_fires_before_block_reuse():
+    """The hook must see the (block, hash) pair while the block still
+    holds that hash's content — i.e. before ``_take_block`` hands the id
+    out for overwriting — and the hash must already be unregistered so a
+    concurrent lookup cannot ref a dying block."""
+    bm = BlockManager(n_blocks=4, block_size=4, bytes_per_token=2,
+                      prefix_cache=True)
+    events = []
+
+    def on_evict(blk, h):
+        events.append(("evict", blk, h))
+        assert h not in bm._index            # unregistered first...
+        assert bm._ref[blk] == 0             # ...and nobody holds it
+
+    bm.evict_hooks.append(on_evict)
+    bm.commit_hooks.append(lambda blk, h: events.append(("commit", blk, h)))
+
+    t1 = bm.allocate(1, 16, list(range(16)))     # fills the pool
+    for i in range(4):
+        bm.commit(1, (i + 1) * 4)
+    bm.free(1)                               # 4 cached, refcount-zero blocks
+    assert [e[0] for e in events] == ["commit"] * 4
+    committed = {e[1]: e[2] for e in events}
+
+    t2 = bm.allocate(2, 16, list(range(100, 116)))   # must evict all four
+    evicts = [e for e in events if e[0] == "evict"]
+    assert {e[1] for e in evicts} == set(committed)
+    assert {e[2] for e in evicts} == set(committed.values())
+    # every reused block id was announced as evicted before reuse
+    assert set(t2.blocks) <= {e[1] for e in evicts}
+    assert t1 is not None and t2 is not None
+
+
+def test_spill_hook_reads_pre_reuse_content(tiny):
+    """Engine-level regression: the spilled payload equals the page
+    content captured at commit time, even though the block is reused by
+    the very allocation that evicted it."""
+    cfg, params = tiny
+    tier = KVBlockStore()
+    eng = _engine(cfg, [params], kv_tier=tier)
+    r = eng.submit(PREFIX, SamplingParams(max_new=2))
+    eng.run()
+    bm = eng.block_mgr
+    want = {h: eng.runner.read_pages(bm._index[h])
+            for h in bm.indexed_hashes()}
+    _churn(eng, seed=50, n=12)               # evict PREFIX's blocks
+    for h, ref_payload in want.items():
+        assert tier.has(h), "committed block vanished without spilling"
+        got = tier._host[h]
+        for (n1, k1, v1), (n2, k2, v2) in zip(got, ref_payload):
+            assert n1 == n2
+            assert np.array_equal(np.asarray(k1), np.asarray(k2))
+            assert np.array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_drop_unreferenced_cache_spills(tiny):
+    """Scale-to-zero's cache drop demotes every cached block to the
+    tier instead of discarding it."""
+    cfg, params = tiny
+    tier = KVBlockStore()
+    eng = _engine(cfg, [params], kv_tier=tier)
+    eng.submit(PREFIX, SamplingParams(max_new=2))
+    eng.run()
+    n_cached = eng.block_mgr.n_cached
+    assert n_cached >= 2
+    eng.block_mgr.drop_unreferenced_cache()
+    assert tier.host_blocks == n_cached
+
+
+# ---------------------------------------------------------------------------
+# Residency index
+# ---------------------------------------------------------------------------
+
+def test_residency_exact_under_churn(tiny):
+    cfg, params = tiny
+    tier = KVBlockStore()
+    eng = _engine(cfg, [params], kv_tier=tier)
+    res = ResidencyIndex(kv_tier=tier)
+    res.attach("r0", eng.block_mgr)
+    rng = np.random.default_rng(3)
+    for i in range(10):
+        n = int(rng.integers(4, 30))
+        q = [int(x) for x in rng.integers(0, VOCAB, n)]
+        eng.submit(q, SamplingParams(max_new=2))
+        eng.run()
+        assert res.resident_hashes("r0") == \
+            set(eng.block_mgr.indexed_hashes()), f"diverged at round {i}"
+
+
+def test_residency_match_counts_warm_and_restorable(tiny):
+    cfg, params = tiny
+    tier = KVBlockStore()
+    eng = _engine(cfg, [params], kv_tier=tier)
+    res = ResidencyIndex(kv_tier=tier)
+    res.attach("r0", eng.block_mgr)
+    eng.submit(PREFIX, SamplingParams(max_new=2))
+    eng.run()
+    assert res.match("r0", PREFIX) == (2, 0)         # both blocks warm
+    i = 0
+    while res.match("r0", PREFIX)[0] > 0:
+        _churn(eng, seed=200 + 17 * i)
+        i += 1
+        assert i < 60
+    warm, restorable = res.match("r0", PREFIX)
+    assert warm == 0 and restorable == 2             # both spilled
+    # detach stops mirroring (and late-attach seeds from the live index)
+    res.detach("r0")
+    _churn(eng, seed=900)
+    res2 = ResidencyIndex(kv_tier=tier)
+    res2.attach("r0", eng.block_mgr)
+    assert res2.resident_hashes("r0") == \
+        set(eng.block_mgr.indexed_hashes())
+
+
+def test_residency_survives_consolidation(tiny):
+    """§6.2 swaps the engine but carries the BlockManager — the attached
+    residency hooks keep firing on the successor."""
+    cfg, params = tiny
+    m = build_model(cfg)
+    sp = [m.slice_stage_params(params, 2, i) for i in range(2)]
+    tier = KVBlockStore()
+    eng = _engine(cfg, sp, kv_tier=tier)
+    res = ResidencyIndex(kv_tier=tier)
+    res.attach("r0", eng.block_mgr)
+    r = eng.submit(PREFIX, SamplingParams(max_new=4))
+    eng.run()
+    want = list(r.generated)
+    eng2 = eng.consolidated(params)
+    assert res.resident_hashes("r0") == set(eng2.block_mgr.indexed_hashes())
+    _churn(eng2, seed=400, n=12)                     # successor evictions...
+    assert res.resident_hashes("r0") == set(eng2.block_mgr.indexed_hashes())
+    r2 = eng2.submit(PREFIX, SamplingParams(max_new=4))
+    eng2.run()
+    assert list(r2.generated) == want                # ...spilled + restored
+
+
+# ---------------------------------------------------------------------------
+# Spill / restore
+# ---------------------------------------------------------------------------
+
+def test_spill_restore_bit_exact_same_engine(tiny):
+    cfg, params = tiny
+    ref = _engine(cfg, [params])
+    want = ref.submit(PREFIX, SamplingParams(max_new=6))
+    ref.run()
+
+    tier = KVBlockStore()
+    eng = _engine(cfg, [params], kv_tier=tier)
+    res = ResidencyIndex(kv_tier=tier)
+    res.attach("r0", eng.block_mgr)
+    r1 = eng.submit(PREFIX, SamplingParams(max_new=6))
+    eng.run()
+    assert list(r1.generated) == list(want.generated)
+    i = 0
+    while res.match("r0", PREFIX)[0] > 0:
+        _churn(eng, seed=600 + 29 * i)
+        i += 1
+        assert i < 60
+    r2 = eng.submit(PREFIX, SamplingParams(max_new=6))
+    eng.run()
+    assert list(r2.generated) == list(want.generated)
+    assert r2.metrics.restored_tokens > 0
+    assert r2.metrics.restore_seconds > 0.0
+    assert tier.restores > 0 and tier.restored_bytes > 0
+
+
+def test_spill_restore_bit_exact_cross_replica(tiny):
+    """Content-addressed payloads restore into a different replica's
+    pool (fresh engine, same weights, shared tier)."""
+    cfg, params = tiny
+    tier = KVBlockStore()
+    eng = _engine(cfg, [params], kv_tier=tier)
+    res = ResidencyIndex(kv_tier=tier)
+    res.attach("a", eng.block_mgr)
+    r1 = eng.submit(PREFIX, SamplingParams(max_new=6))
+    eng.run()
+    i = 0
+    while res.match("a", PREFIX)[0] > 0:
+        _churn(eng, seed=700 + 31 * i)
+        i += 1
+        assert i < 60
+    eng2 = _engine(cfg, [params], kv_tier=tier)
+    r2 = eng2.submit(PREFIX, SamplingParams(max_new=6))
+    eng2.run()
+    assert list(r2.generated) == list(r1.generated)
+    assert r2.metrics.restored_tokens > 0
+
+
+def test_host_capacity_demotes_to_segment_tier(tiny):
+    """A bounded host tier pushes its LRU overflow into the serialized
+    segment store; a segment restore is still bit-exact and charged at
+    the segment tier's (slower) bandwidth."""
+    cfg, params = tiny
+    tier = KVBlockStore(host_capacity_blocks=1)
+    eng = _engine(cfg, [params], kv_tier=tier)
+    res = ResidencyIndex(kv_tier=tier)
+    res.attach("r0", eng.block_mgr)
+    eng.submit(PREFIX, SamplingParams(max_new=2))
+    eng.run()
+    ref = _engine(cfg, [params])
+    want = ref.submit(PREFIX, SamplingParams(max_new=6))
+    ref.run()
+    i = 0
+    while res.match("r0", PREFIX)[0] > 0:
+        _churn(eng, seed=800 + 37 * i)
+        i += 1
+        assert i < 60
+    assert tier.demotions > 0
+    assert tier.host_blocks <= 1
+    hashes = res.chain_hashes("r0", PREFIX)
+    assert any(tier.tier_of(h) == "segment" for h in hashes)
+    seg_rate = tier.restore_rate(next(h for h in hashes
+                                      if tier.tier_of(h) == "segment"))
+    assert seg_rate <= tier.segments.bandwidth < tier.host_bw
+    r2 = eng.submit(PREFIX, SamplingParams(max_new=6))
+    eng.run()
+    assert list(r2.generated) == list(want.generated)
+
+
+def test_restore_accounted_as_measured_flow(tiny):
+    """Each restore is a flow on the shared schedule whose measured
+    seconds match the analytic quote under no contention."""
+    cfg, params = tiny
+    tier = KVBlockStore()
+    eng = _engine(cfg, [params], kv_tier=tier)
+    res = ResidencyIndex(kv_tier=tier)
+    res.attach("r0", eng.block_mgr)
+    eng.submit(PREFIX, SamplingParams(max_new=2))
+    eng.run()
+    i = 0
+    while res.match("r0", PREFIX)[0] > 0:
+        _churn(eng, seed=340 + 41 * i)
+        i += 1
+        assert i < 60
+    hashes = res.chain_hashes("r0", PREFIX)
+    quote = tier.restore_estimate(hashes, now=0.0)
+    assert 0.0 < quote < float("inf")
+    eng.submit(PREFIX, SamplingParams(max_new=1))
+    eng.run()
+    measured = sum(f.seconds for f in tier.restore_flows)
+    assert measured == pytest.approx(quote, rel=0.05)
+    assert sum(f.size for f in tier.restore_flows) == tier.restored_bytes
+
+
+# ---------------------------------------------------------------------------
+# Routing policies (pure units)
+# ---------------------------------------------------------------------------
+
+def _view(name, warm=0, restorable=0, waiting=0, running=0, pending=False):
+    return ReplicaView(name, warm, restorable, 8,
+                       {"waiting": waiting, "preempted": 0,
+                        "running": running}, pending=pending)
+
+
+def test_affinity_prefers_warm_replica_round_robin_ignores_it():
+    views = [_view("a", warm=4), _view("b", warm=0)]
+    aff = KVAffinityPolicy()
+    assert all(aff.choose(views).name == "a" for _ in range(4))
+    rr = RoundRobinPolicy()
+    assert [rr.choose(views).name for _ in range(4)] == ["a", "b", "a", "b"]
+
+
+def test_affinity_discounts_restorable_blocks():
+    aff = KVAffinityPolicy(restore_frac=0.5)
+    warm = _view("w", warm=2)
+    cold_restorable = _view("r", restorable=3)
+    assert aff.score(warm) > aff.score(cold_restorable)     # 16 > 12
+    assert aff.choose([warm, cold_restorable]).name == "w"
+    # but restorable still beats a stone-cold replica
+    assert aff.choose([cold_restorable, _view("z")]).name == "r"
+
+
+def test_affinity_overflows_at_saturation_threshold():
+    aff = KVAffinityPolicy(saturation_queue=4)
+    hot = _view("hot", warm=8, waiting=4)     # at threshold: saturated
+    idle = _view("idle")
+    assert aff.choose([hot, idle]).name == "idle"
+    hot_ok = _view("hot", warm=8, waiting=3)  # below threshold: sticky
+    assert aff.choose([hot_ok, idle]).name == "hot"
+    # everyone saturated: fall back to least-loaded overall
+    busy = _view("busy", waiting=5, running=2)
+    assert aff.choose([hot, busy]).name == "hot"
+    # a pending cold start counts as saturated regardless of queue
+    pend = _view("pend", warm=8, pending=True)
+    assert aff.choose([pend, idle]).name == "idle"
+
+
+def test_least_loaded_and_policy_factory():
+    ll = LeastLoadedPolicy()
+    assert ll.choose([_view("a", waiting=2), _view("b", running=1)]).name \
+        == "b"
+    assert isinstance(make_routing_policy("kv_affinity"), KVAffinityPolicy)
+    custom = KVAffinityPolicy(saturation_queue=9)
+    assert make_routing_policy(custom) is custom
+    with pytest.raises(ValueError, match="unknown routing policy"):
+        make_routing_policy("warmest_first")
+
+
+def test_router_routes_and_records_decisions(tiny):
+    cfg, params = tiny
+    tier = KVBlockStore()
+    router = Router("kv_affinity", kv_tier=tier)
+
+    class _Ep:                                   # endpoint shim
+        def __init__(self, eng):
+            self.engine = eng
+
+        def stats(self):
+            return self.engine.stats()
+
+    engines = {n: _engine(cfg, [params], kv_tier=tier) for n in ("a", "b")}
+    for n, e in engines.items():
+        router.register(n, _Ep(e))
+    engines["a"].submit(PREFIX, SamplingParams(max_new=2))
+    engines["a"].run()
+    d = router.route(PREFIX)
+    assert d.name == "a" and d.warm_blocks == 2 and not d.overflowed
+    d2 = router.route([99, 98, 97, 96, 95, 94, 93, 92])   # cold everywhere
+    assert d2.warm_blocks == 0
+    s = router.stats()
+    assert s["policy"] == "kv_affinity" and s["decisions"] == 2
+    assert s["replicas"] == ["a", "b"]
+    router.unregister("b")
+    assert router.replicas() == ["a"]
+
+
+# ---------------------------------------------------------------------------
+# Engine / endpoint stats
+# ---------------------------------------------------------------------------
+
+def test_engine_stats_shape(tiny):
+    cfg, params = tiny
+    eng = _engine(cfg, [params])
+    r = eng.submit(PREFIX, SamplingParams(max_new=3))
+    s0 = eng.stats()
+    assert s0["waiting"] == 1 and s0["running"] == 0
+    eng.run()
+    s1 = eng.stats()
+    assert s1["waiting"] == 0 and s1["running"] == 0
+    assert s1["steps"] > 0 and s1["free_slots"] == 2
+    assert s1["total_blocks"] >= s1["free_blocks"] > 0
+    assert r.done

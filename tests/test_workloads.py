@@ -3,7 +3,8 @@
 import numpy as np
 
 from repro.workloads.applications import APPLICATIONS
-from repro.workloads.generator import burst, generate, make_instances
+from repro.workloads.generator import (burst, generate, make_instances,
+                                       multi_turn_sessions)
 
 
 def test_instance_creation():
@@ -49,6 +50,41 @@ def test_burst():
     reqs = burst(insts[0], 30, at=3.0)
     assert len(reqs) == 30
     assert all(r.arrival == 3.0 for r in reqs)
+
+
+def test_multi_turn_sessions():
+    """K-turn chat sessions: every turn's prompt strictly extends the
+    previous turn's (the growing shared prefix a KV-aware router
+    exploits), arrivals are sorted and monotone within a session, and
+    all token ids stay inside the requested vocabulary."""
+    inst = make_instances(APPLICATIONS, 1)[0]
+    reqs = multi_turn_sessions(inst, n_sessions=5, turns=4,
+                               first_prompt=24, turn_tokens=8,
+                               vocab=100, seed=7)
+    assert len(reqs) == 5 * 4
+    assert [r.arrival for r in reqs] == sorted(r.arrival for r in reqs)
+    by_session = {}
+    for r in reqs:
+        by_session.setdefault(r.session, []).append(r)
+    assert set(by_session) == set(range(5))
+    for sess, rs in by_session.items():
+        rs.sort(key=lambda r: r.turn)
+        assert [r.turn for r in rs] == [0, 1, 2, 3]
+        assert len(rs[0].prompt_ids) == 24
+        for prev, nxt in zip(rs, rs[1:]):
+            assert nxt.arrival > prev.arrival
+            # strict prefix extension by exactly turn_tokens ids
+            assert nxt.prompt_ids[:len(prev.prompt_ids)] == prev.prompt_ids
+            assert len(nxt.prompt_ids) == len(prev.prompt_ids) + 8
+        for r in rs:
+            assert r.prompt_tokens == len(r.prompt_ids)
+            assert all(0 <= t < 100 for t in r.prompt_ids)
+    # determinism
+    again = multi_turn_sessions(inst, n_sessions=5, turns=4,
+                                first_prompt=24, turn_tokens=8,
+                                vocab=100, seed=7)
+    assert [(r.session, r.turn, r.arrival, r.prompt_ids) for r in again] \
+        == [(r.session, r.turn, r.arrival, r.prompt_ids) for r in reqs]
 
 
 def test_kv_bytes_per_token_from_geometry():
