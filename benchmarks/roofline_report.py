@@ -1,5 +1,8 @@
 """§Roofline report — reads the dry-run JSONL records and emits the
-per-(arch x shape x mesh) roofline table rows as bench CSV."""
+per-(arch x shape x mesh) roofline table rows as bench CSV, plus the
+analytic KV-bytes-per-token rows (full production geometry, per KV pool
+storage dtype) that gate the quantized-KV claims without needing dry-run
+records."""
 
 from __future__ import annotations
 
@@ -9,11 +12,35 @@ import os
 
 from benchmarks.common import Bench
 
+from repro.configs import get_config
+from repro.roofline.analytic import kv_token_bytes
+
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                           "dryrun")
 
+KV_ARCHS = ("granite-3-8b", "qwen1.5-32b")
+KV_DTYPES = (None, "float16", "int8")        # None = legacy bf16 roofline
+
+
+def kv_bytes_rows(bench: Bench):
+    """Analytic KV bytes/token across ALL attention layers at full
+    config geometry for each pool storage dtype — the decode KV-stream
+    term of the roofline, and the gate for 'int8 pages halve decode
+    bytes/token'. Runs with or without dry-run records."""
+    for arch in KV_ARCHS:
+        cfg = get_config(arch)
+        base = kv_token_bytes(cfg, "float16")
+        for kd in KV_DTYPES:
+            label = "bf16-legacy" if kd is None else kd
+            b = kv_token_bytes(cfg, kd)
+            bench.add(f"roofline/kv-bytes-per-token/{arch}/{label}",
+                      0.0, f"bytes={b};vs_fp16={b / base:.3f}")
+        assert kv_token_bytes(cfg, "int8") / base <= 0.6, \
+            f"int8 must (near-)halve KV bytes/token at {arch} geometry"
+
 
 def run(bench: Bench):
+    kv_bytes_rows(bench)
     files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.jsonl")))
     if not files:
         bench.add("roofline/no-dryrun-records", 0.0,

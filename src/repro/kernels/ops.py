@@ -118,6 +118,26 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, kv_len, *,
         q, k_pages, v_pages, block_tables, kv_len, scale=scale)
 
 
+def ragged_paged_attention(q, k_pages, v_pages, tables, row, pos, *,
+                           kv_quant=None, scale: Optional[float] = None,
+                           tile_q: int = 8):
+    """Fused ragged-batch attention over a paged pool: one launch serves a
+    whole mixed prefill-chunk + decode step. q (T,Hq,hd) flattened query
+    tokens; pages (N,bs,Hkv,hd); tables (B,nb); row (T,) table row per
+    token; pos (T,) absolute position per token (-1 = pad). ``kv_quant``
+    carries int8 pools' scale/zero leaves (dequant fused into the K/V
+    loads)."""
+    be = backend()
+    if be in ("pallas", "interpret"):
+        from repro.kernels import ragged_attention as _ra
+        return _ra.ragged_paged_attention(
+            q, k_pages, v_pages, tables, row, pos, kv_quant=kv_quant,
+            scale=scale, tile_q=tile_q, interpret=(be == "interpret"))
+    return _ref.ragged_paged_attention_reference(
+        q, k_pages, v_pages, tables, row, pos, kv_quant=kv_quant,
+        scale=scale)
+
+
 def wkv6(r, k, v, w, u, initial_state=None, *, chunk: int = 64):
     """RWKV6 recurrence. r,k,v,w (B,T,H,hd); u (H,hd)."""
     be = backend()

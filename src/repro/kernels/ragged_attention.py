@@ -1,0 +1,171 @@
+"""Pallas TPU kernel: fused ragged-batch paged attention.
+
+One launch serves a whole mixed ``ScheduleBatch``: the step's query
+tokens — prefill chunks of varying length and history, plus decode rows —
+are flattened into a ragged ``(total_tokens, Hq, hd)`` layout with
+per-token ``(row, pos)`` descriptors. The block-table row ids and the
+block tables themselves ride as scalar-prefetch operands so the K/V
+BlockSpec index maps gather each tile's pages before the body runs
+(same machinery as ``paged_decode_attention``); per-token positions ride
+as a VMEM input and drive the causal mask ``kpos <= pos[t]``, which
+makes history length *dynamic* — no per-(chunk_len, hist_len) recompiles.
+
+Layout contract (enforced by the host wrapper): ``total_tokens`` is a
+multiple of ``tile_q`` and every request's token span is ``tile_q``
+aligned, so each q tile reads exactly one block-table row
+(``row[it * tile_q]``). Pad tokens carry ``pos = -1`` → fully masked →
+exactly zero output.
+
+The int8 variant loads quantized pages plus their per-row scale/zero
+pools and fuses the dequant into the K/V loads — the pools never hold a
+dequantized copy.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.decode_attention import _softmax_init, _softmax_step
+from repro.kernels.pallas_compat import compiler_params
+
+TILE_Q = 8
+
+
+def _ragged_kernel(row_ref, bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float, page_size: int,
+                   tile_q: int, group: int):
+    ib = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        _softmax_init(m_scr, l_scr, acc_scr)
+
+    hd = q_ref.shape[-1]
+    q = q_ref[...].astype(jnp.float32).reshape(tile_q * group, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)            # (bs, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    kpos = ib * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)                 # (1, bs)
+    # per-row valid length: token at pos p attends kpos <= p, i.e.
+    # kpos < p + 1; pad rows (pos = -1) mask everything
+    pos_t = pos_ref[...].reshape(tile_q, 1)           # (TQ, 1)
+    vlen = jnp.broadcast_to(pos_t[:, None], (tile_q, group, 1)
+                            ).reshape(tile_q * group, 1) + 1
+    _softmax_step(q, k, v, kpos, vlen, m_scr, l_scr, acc_scr, scale)
+
+    @pl.when(ib == nb - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[...] = (acc_scr[...] / denom).astype(o_ref.dtype).reshape(
+            o_ref.shape)
+
+
+def _ragged_kernel_q8(row_ref, bt_ref, pos_ref, q_ref, k_ref, v_ref,
+                      ks_ref, kz_ref, vs_ref, vz_ref, o_ref,
+                      m_scr, l_scr, acc_scr, *, scale: float, page_size: int,
+                      tile_q: int, group: int):
+    ib = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        _softmax_init(m_scr, l_scr, acc_scr)
+
+    hd = q_ref.shape[-1]
+    q = q_ref[...].astype(jnp.float32).reshape(tile_q * group, hd)
+    # dequant fused into the K/V loads: pages are int8, scale/zero f32
+    ks = ks_ref[...].reshape(page_size, 1)
+    kz = kz_ref[...].reshape(page_size, 1)
+    vs = vs_ref[...].reshape(page_size, 1)
+    vz = vz_ref[...].reshape(page_size, 1)
+    k = k_ref[0, :, 0].astype(jnp.float32) * ks + kz  # (bs, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32) * vs + vz
+    kpos = ib * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)
+    pos_t = pos_ref[...].reshape(tile_q, 1)
+    vlen = jnp.broadcast_to(pos_t[:, None], (tile_q, group, 1)
+                            ).reshape(tile_q * group, 1) + 1
+    _softmax_step(q, k, v, kpos, vlen, m_scr, l_scr, acc_scr, scale)
+
+    @pl.when(ib == nb - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[...] = (acc_scr[...] / denom).astype(o_ref.dtype).reshape(
+            o_ref.shape)
+
+
+def ragged_paged_attention(q, k_pages, v_pages, tables, row, pos, *,
+                           kv_quant=None, scale: Optional[float] = None,
+                           tile_q: int = TILE_Q, interpret: bool = False):
+    """q (T,Hq,hd) ragged query tokens; pages (N,bs,Hkv,hd); tables (B,nb)
+    int32 page ids; row (T,) table row per token; pos (T,) absolute
+    position per token (-1 = pad) -> (T,Hq,hd).
+
+    T must be a multiple of ``tile_q`` and ``row`` constant within each
+    tile (the host flattener aligns request spans to ``tile_q``).
+    ``kv_quant`` switches to the fused-dequant int8 variant."""
+    t, hq, hd = q.shape
+    n_pages, page_size, hkv, _ = k_pages.shape
+    nb = tables.shape[1]
+    group = hq // hkv
+    assert t % tile_q == 0, f"T={t} not a multiple of tile_q={tile_q}"
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(t, hkv, group, hd)
+    row32 = row.astype(jnp.int32)
+    tables32 = tables.astype(jnp.int32)
+    pos2 = pos.astype(jnp.int32).reshape(1, t)
+
+    grid = (t // tile_q, hkv, nb)
+    page_idx = lambda it, h, ib, rw, bt: (bt[rw[it * tile_q], ib], 0, h, 0)
+    in_specs = [
+        pl.BlockSpec((1, tile_q), lambda it, h, ib, rw, bt: (0, it)),
+        pl.BlockSpec((tile_q, 1, group, hd),
+                     lambda it, h, ib, rw, bt: (it, h, 0, 0)),
+        pl.BlockSpec((1, page_size, 1, hd), page_idx),
+        pl.BlockSpec((1, page_size, 1, hd), page_idx),
+    ]
+    operands = [pos2, qg, k_pages, v_pages]
+    if kv_quant is None:
+        body = _ragged_kernel
+    else:
+        body = _ragged_kernel_q8
+        qspec = pl.BlockSpec((1, page_size, 1),
+                             lambda it, h, ib, rw, bt:
+                             (bt[rw[it * tile_q], ib], 0, h))
+        in_specs += [qspec] * 4
+        operands += [kv_quant["k_scale"], kv_quant["k_zero"],
+                     kv_quant["v_scale"], kv_quant["v_zero"]]
+
+    kernel = functools.partial(body, scale=scale, page_size=page_size,
+                               tile_q=tile_q, group=group)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tile_q, 1, group, hd),
+                               lambda it, h, ib, rw, bt: (it, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((tile_q * group, 1), jnp.float32),
+            pltpu.VMEM((tile_q * group, 1), jnp.float32),
+            pltpu.VMEM((tile_q * group, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, hkv, group, hd), q.dtype),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(row32, tables32, *operands)
+
+    return out.reshape(t, hq, hd)

@@ -185,6 +185,84 @@ def flash_attention_blocked_skip(q, k, v, *, q_offset: int = 0, kv_len=None,
 
 
 # ---------------------------------------------------------------------------
+# int8 KV page quantization (per-row, per-KV-head, asymmetric).
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(x):
+    """Quantize KV rows to int8 along the head_dim axis.
+
+    x (..., Hkv, hd) float -> (q int8, scale f32 (..., Hkv), zero f32
+    (..., Hkv)) with x ~= q * scale + zero. Asymmetric per-(row, head):
+    zero = midrange, scale = range / 254, so the round-trip error is
+    bounded by scale / 2 = range / 508 elementwise. Per-row granularity
+    means decode appends never re-quantize already-written pages."""
+    xf = x.astype(jnp.float32)
+    mx = xf.max(axis=-1)
+    mn = xf.min(axis=-1)
+    zero = (mx + mn) * 0.5
+    scale = jnp.maximum(mx - mn, 1e-8) / 254.0
+    q = jnp.clip(jnp.round((xf - zero[..., None]) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale, zero
+
+
+def dequantize_kv(q, scale, zero):
+    """Inverse of :func:`quantize_kv`: (..., Hkv, hd) f32."""
+    return q.astype(jnp.float32) * scale[..., None] + zero[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Ragged-batch paged attention oracle: one flat launch over a whole
+# mixed prefill-chunk + decode ScheduleBatch.
+# ---------------------------------------------------------------------------
+
+
+def ragged_paged_attention_reference(q, k_pages, v_pages, tables, row, pos, *,
+                                     kv_quant=None,
+                                     scale: Optional[float] = None):
+    """Oracle for the fused ragged kernel (kernels/ragged_attention.py).
+
+    q (T,Hq,hd) — the step's query tokens flattened across requests
+    (prefill chunks of any length and decode rows side by side);
+    pages (N,bs,Hkv,hd); tables (B,nb) int32 page ids; row (T,) int32
+    block-table row of each token; pos (T,) int32 absolute position.
+    Token t attends causally over kv positions [0, pos[t]] of its row's
+    pages (its own K/V included — written before attention, as in the
+    chunked-prefill path). Padded tokens (pos < 0) return exactly zero.
+
+    ``kv_quant`` ({k_scale,k_zero,v_scale,v_zero} pools (N,bs,Hkv) f32)
+    dequantizes int8 pages at load.
+
+    Implemented as a per-token gather of the full table span followed by
+    :func:`mha_reference` with ``kv_len = pos + 1`` — the tail past a
+    token's span is masked to exact zeros, so the math is term-for-term
+    the chunked prefill oracle's.
+    """
+    t, hq, hd = q.shape
+    n_pages, bs, hkv, _ = k_pages.shape
+    nb = tables.shape[1]
+    bt = tables.astype(jnp.int32)[row]                 # (T, nb)
+    idx = (bt * bs)[:, :, None] + jnp.arange(bs)[None, None, :]
+    idx = idx.reshape(t, nb * bs)                      # (T, L)
+    kf = k_pages.reshape(n_pages * bs, hkv, hd)[idx]   # (T, L, Hkv, hd)
+    vf = v_pages.reshape(n_pages * bs, hkv, hd)[idx]
+    if kv_quant is not None:
+        ks = kv_quant["k_scale"].reshape(n_pages * bs, hkv)[idx]
+        kz = kv_quant["k_zero"].reshape(n_pages * bs, hkv)[idx]
+        vs = kv_quant["v_scale"].reshape(n_pages * bs, hkv)[idx]
+        vz = kv_quant["v_zero"].reshape(n_pages * bs, hkv)[idx]
+        kf = dequantize_kv(kf, ks, kz)
+        vf = dequantize_kv(vf, vs, vz)
+    out = mha_reference(q[:, None], kf, vf, causal=False,
+                        kv_len=pos.astype(jnp.int32) + 1, scale=scale)
+    # fully-masked (padded) rows come out of the softmax uniform — zero
+    # them so pad rows are exactly 0, matching the kernel's l==0 guard
+    live = (pos >= 0)[:, None, None].astype(out.dtype)
+    return out[:, 0] * live
+
+
+# ---------------------------------------------------------------------------
 # Decode attention oracle: one new token per sequence against a long cache.
 # ---------------------------------------------------------------------------
 

@@ -10,7 +10,13 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import constrain
 from repro.kernels import ops
+from repro.kernels.ref import quantize_kv
 from repro.models.common import ParamDef, apply_rope
+
+# Per-row quantization parameters stored alongside int8 page pools, in the
+# same cache subtree as k_pages/v_pages so every page-granular operation
+# (copy_pages, spill/restore, migration gather) carries them automatically.
+KV_QUANT_LEAVES = ("k_scale", "k_zero", "v_scale", "v_zero")
 
 
 def attn_defs(cfg: ModelConfig, cross: bool = False) -> dict:
@@ -61,14 +67,37 @@ KV_CACHE_AXES = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
 
 
 def make_paged_kv_cache(cfg: ModelConfig, n_attn_layers: int, n_pages: int,
-                        page_size: int, dtype) -> dict:
+                        page_size: int, dtype, kv_dtype=None) -> dict:
     """Paged KV pool shared by all sequences: layout (L, N, bs, Hkv, hd);
-    sequences address pages through per-request block tables."""
+    sequences address pages through per-request block tables. An int8
+    ``kv_dtype`` stores quantized pages plus per-row scale/zero leaves
+    (:data:`KV_QUANT_LEAVES`, (L, N, bs, Hkv) f32)."""
+    kd = jnp.dtype(kv_dtype) if kv_dtype is not None else jnp.dtype(dtype)
     shape = (n_attn_layers, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
-    return {
-        "k_pages": jnp.zeros(shape, dtype),
-        "v_pages": jnp.zeros(shape, dtype),
+    pools = {
+        "k_pages": jnp.zeros(shape, kd),
+        "v_pages": jnp.zeros(shape, kd),
     }
+    if kd == jnp.dtype(jnp.int8):
+        for leaf in KV_QUANT_LEAVES:
+            pools[leaf] = jnp.zeros(shape[:-1], jnp.float32)
+    return pools
+
+
+def paged_kv_token_bytes(cfg: ModelConfig, kv_dtype=None) -> int:
+    """Exact bytes one token row occupies in ONE attention period's page
+    pools: the K + V rows plus, for quantized pools, the per-row
+    scale/zero leaves. Single source of truth for every KV byte account
+    (``BlockManager.bytes_per_token`` → migration_bytes, spill/restore
+    flow sizes, roofline KV traffic). ``kv_dtype=None`` means the pools
+    hold the compute dtype (``cfg.dtype``) — the pre-quantization
+    formula."""
+    kd = jnp.dtype(kv_dtype) if kv_dtype is not None \
+        else jnp.dtype(cfg.dtype)
+    per = 2 * cfg.n_kv_heads * cfg.head_dim * kd.itemsize
+    if kd == jnp.dtype(jnp.int8):
+        per += len(KV_QUANT_LEAVES) * cfg.n_kv_heads * 4   # f32 scale/zero
+    return per
 
 
 def paged_kv_write(pages, new, block_tables, positions):
@@ -83,6 +112,27 @@ def paged_kv_write(pages, new, block_tables, positions):
     idx = (page * bs + positions % bs).reshape(-1)
     flat = pages.reshape((n_pages * bs,) + pages.shape[2:])
     vals = new.astype(pages.dtype).reshape((-1,) + new.shape[2:])
+    return flat.at[idx].set(vals).reshape(pages.shape)
+
+
+def ragged_kv_write(pages, new, tables, row, pos, valid):
+    """Scatter a ragged batch's new K/V rows into the shared page pool.
+
+    pages (N,bs,...); new (T,...trailing dims of pages...); tables (B,nb)
+    int32 page ids; row (T,) block-table row per token; pos (T,) absolute
+    position per token; valid (T,) bool. Token t lands at page
+    ``tables[row[t], pos[t] // bs]``, slot ``pos[t] % bs``; invalid
+    (padding) rows are routed to the trash page — the pool's last page,
+    which the runner's null-page convention reserves (n_pages =
+    n_blocks + 1)."""
+    n_pages, bs = pages.shape[0], pages.shape[1]
+    posc = jnp.maximum(pos, 0)                        # pad rows: safe index
+    page = tables.astype(jnp.int32)[row, posc // bs]  # (T,)
+    idx = page * bs + posc % bs
+    trash = (n_pages - 1) * bs
+    idx = jnp.where(valid, idx, trash)
+    flat = pages.reshape((n_pages * bs,) + pages.shape[2:])
+    vals = new.astype(pages.dtype)
     return flat.at[idx].set(vals).reshape(pages.shape)
 
 
@@ -107,7 +157,9 @@ def self_attention(cfg: ModelConfig, p: dict, x, *, positions,
                    decode: bool = False,
                    allow_append: bool = True,
                    block_tables=None,
-                   hist_len: int = 0):
+                   hist_len: int = 0,
+                   ragged=None,
+                   kv_quant: Optional[dict] = None):
     """x (B,S,d). positions (B,S) absolute positions of the tokens in x.
 
     Full-sequence mode (train/prefill): attends within x; if kv_cache slices
@@ -126,7 +178,17 @@ def self_attention(cfg: ModelConfig, p: dict, x, *, positions,
     are written at ``positions`` and attention runs over the gathered
     rows [0, hist_len + S) with ``q_offset=hist_len`` — bit-identical to
     prefilling the whole sequence at once.
-    Returns (out (B,S,d), (k_cache', v_cache') or None).
+
+    ``ragged`` = (tables (R,nb), row (T,), valid (T,)) switches to the
+    fused ragged-batch path: x is (1, T, d) — a whole mixed step (prefill
+    chunks of varying history + decode rows) flattened into one token
+    axis, ``positions`` (1, T) giving each token's absolute position
+    (-1 = pad). K/V are scattered via :func:`ragged_kv_write` (pads to the
+    trash page) and ONE ``ops.ragged_paged_attention`` launch serves the
+    whole batch. ``kv_quant`` (the int8 pools' scale/zero leaves) turns on
+    quantized writes + fused-dequant loads; ``new_cache`` is then a dict
+    of all five pool leaves instead of a (k, v) tuple.
+    Returns (out (B,S,d), new_cache or None).
     """
     bsz, seq, _ = x.shape
     q = _project(cfg, p, x, "q", cfg.n_heads)
@@ -138,8 +200,41 @@ def self_attention(cfg: ModelConfig, p: dict, x, *, positions,
     q = constrain(q, "batch", "seq", "heads", "head_dim")
     k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
 
+    assert kv_quant is None or ragged is not None, \
+        "quantized KV pools are only served by the ragged fused path"
     new_cache = None
-    if not decode:
+    if ragged is not None:
+        assert kv_cache is not None and bsz == 1
+        tables, row, valid = ragged
+        pos1 = positions[0]
+        q1, k1, v1 = q[0], k[0], v[0]
+        ck, cv = kv_cache
+        if kv_quant is not None:
+            kq, ks, kz = quantize_kv(k1)
+            vq, vs, vz = quantize_kv(v1)
+            ck = ragged_kv_write(ck, kq, tables, row, pos1, valid)
+            cv = ragged_kv_write(cv, vq, tables, row, pos1, valid)
+            nq = {
+                "k_scale": ragged_kv_write(kv_quant["k_scale"], ks,
+                                           tables, row, pos1, valid),
+                "k_zero": ragged_kv_write(kv_quant["k_zero"], kz,
+                                          tables, row, pos1, valid),
+                "v_scale": ragged_kv_write(kv_quant["v_scale"], vs,
+                                           tables, row, pos1, valid),
+                "v_zero": ragged_kv_write(kv_quant["v_zero"], vz,
+                                          tables, row, pos1, valid),
+            }
+            new_cache = {"k_pages": ck, "v_pages": cv, **nq}
+            out1 = ops.ragged_paged_attention(q1, ck, cv, tables, row,
+                                              pos1, kv_quant=nq)
+        else:
+            ck = ragged_kv_write(ck, k1, tables, row, pos1, valid)
+            cv = ragged_kv_write(cv, v1, tables, row, pos1, valid)
+            new_cache = (ck, cv)
+            out1 = ops.ragged_paged_attention(q1, ck, cv, tables, row,
+                                              pos1)
+        out = out1[None].astype(x.dtype)
+    elif not decode:
         assert hist_len == 0 or block_tables is not None, \
             "chunked prefill (hist_len > 0) needs the paged layout"
         if kv_cache is not None:

@@ -76,11 +76,13 @@ def lm_defs(cfg: ModelConfig) -> dict:
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype,
                as_structs: bool = False, n_periods: Optional[int] = None,
                paged: bool = False, n_pages: Optional[int] = None,
-               page_size: Optional[int] = None):
+               page_size: Optional[int] = None, kv_dtype=None):
     """Stacked per-period cache. ``paged=True`` stores attention KV as a
     shared page pool (np, N, bs, Hkv, hd) addressed via block tables
     (serving/kvcache.py) instead of slot-contiguous (np, B, S, Hkv, hd);
-    recurrent mixer states stay slot-indexed either way."""
+    recurrent mixer states stay slot-indexed either way. ``kv_dtype``
+    (paged only) overrides the pool storage dtype; int8 adds per-row
+    scale/zero leaves (attention.KV_QUANT_LEAVES, f32)."""
     np_ = n_periods if n_periods is not None else cfg.n_periods
     mk = (lambda s, dt: jax.ShapeDtypeStruct(s, dt)) if as_structs \
         else (lambda s, dt: jnp.zeros(s, dt))
@@ -91,9 +93,14 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype,
         if mix == "attn":
             if paged:
                 assert n_pages is not None and page_size is not None
+                kd = jnp.dtype(kv_dtype) if kv_dtype is not None \
+                    else jnp.dtype(dtype)
                 shp = (np_, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
-                cache[slot] = {"k_pages": mk(shp, dtype),
-                               "v_pages": mk(shp, dtype)}
+                cache[slot] = {"k_pages": mk(shp, kd),
+                               "v_pages": mk(shp, kd)}
+                if kd == jnp.dtype(jnp.int8):
+                    for leaf in attn.KV_QUANT_LEAVES:
+                        cache[slot][leaf] = mk(shp[:-1], jnp.float32)
                 continue
             shp = (np_, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
             cache[slot] = {"k": mk(shp, dtype), "v": mk(shp, dtype)}
@@ -160,7 +167,7 @@ def head(cfg: ModelConfig, params: dict, x):
 
 def _period_step(cfg: ModelConfig, pslice: dict, cslice, x, positions,
                  decode: bool, causal: bool, block_tables=None,
-                 hist_len: int = 0):
+                 hist_len: int = 0, ragged=None):
     aux = jnp.zeros((), jnp.float32)
     new_cache = {}
     for i, (mix, mlp) in enumerate(_period_plan(cfg)):
@@ -174,14 +181,20 @@ def _period_step(cfg: ModelConfig, pslice: dict, cslice, x, positions,
                 kvc = (c["k_pages"], c["v_pages"])
             else:
                 kvc = (c["k"], c["v"]) if c is not None else None
+            kvq = ({leaf: c[leaf] for leaf in attn.KV_QUANT_LEAVES}
+                   if paged and "k_scale" in c else None)
             y, nc = attn.self_attention(cfg, sp["mixer"], xin,
                                         positions=positions, causal=causal,
                                         kv_cache=kvc, decode=decode,
                                         block_tables=(block_tables if paged
                                                       else None),
-                                        hist_len=hist_len if paged else 0)
+                                        hist_len=hist_len if paged else 0,
+                                        ragged=ragged, kv_quant=kvq)
             if nc is not None:
-                if isinstance(nc, tuple) and nc[0] == "append":
+                if isinstance(nc, dict):
+                    # ragged int8 path: all five pool leaves
+                    new_cache[slot] = nc
+                elif isinstance(nc, tuple) and nc[0] == "append":
                     # §Perf it.5: only the new token's K/V leave the scan;
                     # run_blocks writes them into the cache once, after.
                     new_cache[slot] = {"k_new": nc[1], "v_new": nc[2]}
@@ -216,12 +229,14 @@ def _period_step(cfg: ModelConfig, pslice: dict, cslice, x, positions,
 def run_blocks(cfg: ModelConfig, blocks: dict, x, positions, *,
                cache: Optional[dict] = None, decode: bool = False,
                causal: bool = True, remat: str = "none",
-               block_tables=None, hist_len: int = 0):
+               block_tables=None, hist_len: int = 0, ragged=None):
     """Scan the stacked periods. ``blocks``/``cache`` leading dim = periods
     (possibly a stage's slice). ``block_tables`` (B,nb) addresses paged attn
     pools (shared across periods — the page id axis is per-period).
     ``hist_len`` (static) marks x as a prefill *chunk* with that many KV
     rows already in the paged pools (see attention.self_attention).
+    ``ragged`` = (tables, row, valid) routes attention through the fused
+    ragged-batch kernel — x is (1, T, d), positions (1, T) with -1 pads.
     Returns (x, new_cache, aux_sum)."""
 
     def step(carry, xs):
@@ -229,7 +244,7 @@ def run_blocks(cfg: ModelConfig, blocks: dict, x, positions, *,
         pslice, cslice = xs
         h, new_c, a = _period_step(cfg, pslice, cslice, h, positions,
                                    decode, causal, block_tables=block_tables,
-                                   hist_len=hist_len)
+                                   hist_len=hist_len, ragged=ragged)
         return (h, aux + a), new_c
 
     if remat == "full":

@@ -220,13 +220,16 @@ def model_flops(cfg, shape) -> float:
 
 def analyze(arch: str, shape, mesh_name: str, chips: int, cost: dict,
             memory_stats, hlo_text: str, cfg,
-            policy: str = "baseline") -> Roofline:
+            policy: str = "baseline", kv_dtype=None) -> Roofline:
+    """``kv_dtype`` parameterizes the analytic KV-traffic term on the KV
+    pool storage dtype (serving engines with quantized pages); ``None``
+    keeps the legacy bf16 assumption."""
     train_mult = 4.0 if shape.kind == "train" else 1.0  # fwd+remat+bwd
     flops = analytic.step_flops(cfg, shape,
                                 causal_skip="skip" in policy) * train_mult
     pbytes = cfg.size_bytes()
     hbm = analytic.hbm_bytes_per_device(cfg, shape, chips, pbytes,
-                                        train_mult)
+                                        train_mult, kv_dtype=kv_dtype)
     coll = collective_bytes(hlo_text)
     peak_mem = getattr(memory_stats, "temp_size_in_bytes", 0) + \
         getattr(memory_stats, "argument_size_in_bytes", 0)

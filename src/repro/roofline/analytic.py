@@ -117,10 +117,27 @@ def step_flops(cfg: ModelConfig, shape: ShapeConfig,
     return total
 
 
+def kv_token_bytes(cfg: ModelConfig, kv_dtype=None) -> int:
+    """Exact KV bytes one token occupies across ALL attention layers —
+    the per-period figure (storage dtype + quant scale/zero overhead)
+    delegated to the serving layer's single source of truth
+    (attention.paged_kv_token_bytes) times the attention layer count.
+    ``kv_dtype=None`` means bf16-class storage (the legacy roofline
+    assumption: 2 bytes/element, no overhead)."""
+    n_attn = sum(1 for m, _ in cfg.layer_plan if m == "attn")
+    if kv_dtype is None:
+        return 2 * cfg.n_kv_heads * cfg.head_dim * BF16 * n_attn
+    from repro.models.attention import paged_kv_token_bytes
+    return paged_kv_token_bytes(cfg, kv_dtype) * n_attn
+
+
 def hbm_bytes_per_device(cfg: ModelConfig, shape: ShapeConfig,
                          chips: int, param_bytes_total: int,
-                         train_mult: float) -> float:
-    """First-order HBM traffic per device per step."""
+                         train_mult: float, kv_dtype=None) -> float:
+    """First-order HBM traffic per device per step. ``kv_dtype``
+    parameterizes the KV-stream term on the pool storage dtype (int8
+    pages roughly halve decode's KV traffic at production head_dim);
+    ``None`` keeps the legacy bf16 formula exactly."""
     d = cfg.d_model
     if shape.kind == "decode":
         tokens = shape.global_batch
@@ -140,8 +157,7 @@ def hbm_bytes_per_device(cfg: ModelConfig, shape: ShapeConfig,
                           else tokens / min(chips, 16)) * d * BF16 * 4
     traffic += act * (2 if shape.kind == "train" else 1)
     # KV cache
-    n_attn = sum(1 for m, _ in cfg.layer_plan if m == "attn")
-    kv_tok = 2 * cfg.n_kv_heads * cfg.head_dim * BF16 * n_attn
+    kv_tok = kv_token_bytes(cfg, kv_dtype)
     if shape.kind == "decode":
         traffic += kv_tok * shape.seq_len * shape.global_batch / chips
         # recurrent states

@@ -44,8 +44,23 @@ __all__ = ["KVBlockStore"]
 
 # Payload: ordered (cache_slot_name, k_pages, v_pages) triples; the page
 # arrays are (n_attn_periods_total, block_size, n_kv_heads, head_dim),
-# concatenated over the pipeline in stage order.
-Payload = List[Tuple[str, np.ndarray, np.ndarray]]
+# concatenated over the pipeline in stage order. Quantized (int8) pools
+# append a 4th element: a dict of the per-row scale/zero leaves
+# (attention.KV_QUANT_LEAVES), each (n_attn_periods_total, block_size,
+# n_kv_heads) f32 — their bytes count toward every spill/restore flow.
+Payload = List[Tuple]
+
+
+def _entry_nbytes(entry) -> int:
+    """Exact bytes of one payload entry, auxiliary quant leaves included."""
+    n = int(entry[1].nbytes) + int(entry[2].nbytes)
+    if len(entry) > 3:
+        n += sum(int(np.asarray(a).nbytes) for a in entry[3].values())
+    return n
+
+
+def payload_nbytes(payload: Payload) -> int:
+    return sum(_entry_nbytes(e) for e in payload)
 
 HOST_BW = 12e9                       # PCIe class (matches ServerSpec default)
 
@@ -124,9 +139,14 @@ class KVBlockStore:
             return
         if self.segments.has(h):          # already demoted: keep one copy
             return
-        nbytes = sum(int(k.nbytes) + int(v.nbytes) for _, k, v in payload)
-        self._host[h] = [(name, np.asarray(k), np.asarray(v))
-                         for name, k, v in payload]
+        nbytes = payload_nbytes(payload)
+        host = []
+        for entry in payload:
+            e = (entry[0], np.asarray(entry[1]), np.asarray(entry[2]))
+            if len(entry) > 3:
+                e += ({l: np.asarray(a) for l, a in entry[3].items()},)
+            host.append(e)
+        self._host[h] = host
         self._host_nbytes[h] = nbytes
         self.spills += 1
         self.spilled_bytes += nbytes
@@ -149,8 +169,7 @@ class KVBlockStore:
             cap = self.host_bw
         else:
             payload = self.segments.pop(h)
-            nbytes = sum(int(k.nbytes) + int(v.nbytes)
-                         for _, k, v in payload)
+            nbytes = payload_nbytes(payload)
             cap = self.segments.bandwidth
         flow = self.schedule.transfer(
             self.server_id, f"kvrestore{self._fid}", nbytes,

@@ -76,6 +76,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.kernels import ops
+from repro.models.attention import paged_kv_token_bytes
 from repro.models.model import Model
 from repro.serving.api import (FinishReason, SamplingParams, StepOutput,
                                TokenEvent, sample_token)
@@ -96,29 +97,55 @@ class Engine:
                  prefix_cache: bool = False,
                  prefill_chunk: Optional[int] = None,
                  policy: Union[str, SchedulingPolicy] = "fcfs",
-                 kv_tier=None):
+                 kv_tier=None, kv_dtype=None,
+                 fused: Optional[bool] = None):
         self.cfg = cfg
         self.model = Model(cfg)
         if paged is None:
             paged = ops.decode_mode() == "paged"
         self.paged = paged
+        attn_only = (all(m == "attn" for m in cfg.mixer_pattern)
+                     and not cfg.is_encdec)
         if prefix_cache or prefill_chunk is not None:
             if not paged:
                 raise ValueError("prefix_cache / prefill_chunk need the "
                                  "paged KV layout (Engine(paged=True))")
-            if any(m != "attn" for m in cfg.mixer_pattern) or cfg.is_encdec:
+            if not attn_only:
                 raise ValueError(
                     "prefix_cache / prefill_chunk need an attention-only "
                     "decoder: recurrent mixer state is not block-shareable "
                     f"({cfg.name})")
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
+        if kv_dtype is not None and not paged:
+            raise ValueError("kv_dtype overrides the *paged* pool storage "
+                             "dtype (Engine(paged=True))")
+        quantized = (kv_dtype is not None
+                     and jnp.dtype(kv_dtype) == jnp.dtype(jnp.int8))
+        if fused is None:
+            fused = quantized
+        if fused:
+            if not paged:
+                raise ValueError("the fused ragged step needs the paged KV "
+                                 "layout (Engine(paged=True))")
+            if not attn_only:
+                raise ValueError(
+                    "the fused ragged step needs an attention-only decoder: "
+                    f"recurrent mixers can't share one token axis "
+                    f"({cfg.name})")
+        if quantized and not fused:
+            raise ValueError("int8 KV pages are only served by the fused "
+                             "ragged kernel (fused=True)")
+        self.kv_dtype = kv_dtype
+        self.fused = fused
         self.prefix_cache = prefix_cache
         self.prefill_chunk = prefill_chunk
         self.max_batch = max_batch
         self.max_seq = max_seq
-        kv_per_tok = 2 * cfg.n_kv_heads * cfg.head_dim * \
-            jnp.dtype(cfg.dtype).itemsize
+        # single source of truth for KV bytes/token (attention.py): with
+        # kv_dtype=None this is the legacy 2*Hkv*hd*itemsize(compute dtype)
+        # formula; int8 adds the per-row f32 scale/zero leaves
+        kv_per_tok = paged_kv_token_bytes(cfg, kv_dtype)
         n_blocks = max_batch * (max_seq // block_size + 1)
         self.block_mgr = BlockManager(
             n_blocks=n_blocks, block_size=block_size,
@@ -127,7 +154,7 @@ class Engine:
                                    prefix_cache=prefix_cache)
         self.runner = ModelRunner(cfg, stage_params, max_batch, max_seq,
                                   paged=paged, n_blocks=n_blocks,
-                                  block_size=block_size)
+                                  block_size=block_size, kv_dtype=kv_dtype)
         self._rid = itertools.count()
         self.finished: List[GenRequest] = []
         self.steps = 0
@@ -255,6 +282,10 @@ class Engine:
             params = SamplingParams(max_new=max_new)
         if params is None:
             params = SamplingParams()
+        if prefix_embeds is not None and self.fused:
+            raise ValueError("prefix_embeds (vision prefixes) are not "
+                             "supported on the fused ragged step: the "
+                             "flattened token axis carries token ids only")
         req = GenRequest(next(self._rid), list(prompt), params,
                          prefix_embeds)
         req.metrics.submit_step = self.steps
@@ -343,7 +374,13 @@ class Engine:
         prefill frees its slot for a same-step admission — then one
         batched decode over the final plan's decode set. A *mixed* step
         is one where chunked prefill and decode coexist. Returns the
-        step's newly emitted token events (streaming)."""
+        step's newly emitted token events (streaming).
+
+        ``fused=True`` engines route through :meth:`_step_fused`: the
+        same plans, but every forward of the step collapses into (at
+        most) two fused ragged launches."""
+        if self.fused:
+            return self._step_fused()
         self._check_live()
         self.steps += 1
         events: List[TokenEvent] = []
@@ -390,6 +427,140 @@ class Engine:
                 self._extend(r, nxt)
                 if reason is not None:
                     self._finish(r, reason)
+        return StepOutput(self.steps, tuple(events),
+                          tuple(r.rid for r in self.finished[n_done:]),
+                          len(self.active()), sched.num_queued(),
+                          prefill_tokens=self._step_prefill_tokens,
+                          preempted=tuple(preempted_rids))
+
+    def _step_fused(self) -> StepOutput:
+        """One scheduler iteration on the fused ragged path. The plan loop
+        runs exactly as in :meth:`step` but *defers the compute*: prefill
+        assignments only advance ``req.prefilled`` (so later plans see the
+        right resume/decode sets) and queue their chunks. Then:
+
+          * launch 1 — ONE fused ragged forward over every pending
+            prefill chunk plus every request that was already decoding
+            (``plan.decodes`` minus the requests still completing prefill
+            this step);
+          * launch 2 — the requests that *completed* prefill this step:
+            fresh ones need their first token sampled (from launch 1's
+            logits) before they can decode it, resumed ones re-feed their
+            last emitted token.
+
+        Block commits move after launch 1 (a same-step follower misses
+        sharing a chunk prefilled this very step and recomputes it —
+        streams are unchanged); emission order matches the legacy step
+        exactly (prefill first-tokens in plan order, then decode tokens in
+        ``plan.decodes`` order), so greedy token streams are bit-exact
+        with a non-fused engine."""
+        self._check_live()
+        self.steps += 1
+        events: List[TokenEvent] = []
+        n_done = len(self.finished)
+        self._step_prefill_tokens = 0
+        sched = self.scheduler
+        sched.begin_step(self.steps,
+                         math.inf if self.prefill_chunk is None
+                         else self.prefill_chunk)
+        preempted_rids: List[int] = []
+        pending: List[PrefillAssignment] = []
+        while True:
+            plan = sched.schedule()
+            for req, slot in plan.preempted:
+                preempted_rids.append(req.rid)
+                self.runner.clear_row(slot)
+                self.runner.clear_slot(slot)
+                # a deferred chunk whose request just lost its slot and
+                # blocks must not execute: the launch would write into
+                # freed (possibly re-allocated) pages
+                pending = [pa for pa in pending if pa.req.rid != req.rid]
+            for req in plan.admitted:
+                self.runner.set_row(req.slot,
+                                    self.block_mgr.tables[req.rid].blocks)
+            self._apply_restores(plan.admitted)
+            self._apply_copies()
+            for pa in plan.prefills:
+                pa.req.prefilled = pa.start + pa.n
+                pending.append(pa)
+            if plan.idle:
+                break
+
+        # ---- launch 1: pending chunks + already-decoding requests
+        # merge a request's chunks (contiguous by construction) into one
+        # segment; keep first-assignment order for emission parity
+        chunks = {}                       # rid -> [req, tokens, start]
+        order: List[int] = []
+        for pa in pending:
+            tok = list(pa.req.chain()[pa.start:pa.start + pa.n])
+            self._step_prefill_tokens += pa.n
+            if pa.req.rid in chunks:
+                ent = chunks[pa.req.rid]
+                assert ent[2] + len(ent[1]) == pa.start
+                ent[1].extend(tok)
+            else:
+                chunks[pa.req.rid] = [pa.req, tok, pa.start]
+                order.append(pa.req.rid)
+        pending_rids = set(order)
+        decs = list(plan.decodes)
+        old_decodes = [r for r in decs if r.rid not in pending_rids]
+        segments = []
+        seg_of = {}
+        for rid in order:
+            req, tok, start = chunks[rid]
+            seg_of[rid] = len(segments)
+            segments.append((req.slot, tok, start))
+        for r in old_decodes:
+            seg_of[r.rid] = len(segments)
+            segments.append((r.slot, [r.generated[-1]], r.pos_next))
+        h1 = self.runner.forward_batch(segments) if segments else None
+
+        # ---- prefill lifecycle effects, in plan order
+        for rid in order:
+            req = chunks[rid][0]
+            self.block_mgr.commit(req.rid, req.prefilled)
+            if not req.prefill_done:
+                continue
+            if not req.generated:         # first admission: emit token 0
+                req.metrics.admit_step = self.steps
+                first = sample_token(h1[seg_of[rid]], req.params, 0)
+                reason = self._emit(req, first, events)
+                self._extend(req, first)
+                if reason is not None:
+                    self._finish(req, reason)
+            else:                         # resume: decode re-feeds the tail
+                self._extend(req, req.generated[-1])
+
+        # ---- launch 2: requests whose prefill completed this step decode
+        # their freshly sampled / re-fed token
+        new_decodes = [r for r in decs
+                       if r.rid in pending_rids and not r.done]
+        h2 = None
+        idx2 = {}
+        if new_decodes:
+            segs2 = []
+            for i, r in enumerate(new_decodes):
+                idx2[r.rid] = i
+                segs2.append((r.slot, [r.generated[-1]], r.pos_next))
+            h2 = self.runner.forward_batch(segs2)
+
+        # ---- decode emissions, in plan.decodes order (legacy parity)
+        for r in decs:
+            if r.done:
+                continue
+            logits = (h2[idx2[r.rid]] if r.rid in pending_rids
+                      else h1[seg_of[r.rid]])
+            if r.params.greedy:
+                nxt = int(np.asarray(jnp.argmax(logits)))
+            else:
+                nxt = sample_token(logits, r.params, len(r.generated))
+            r.metrics.decode_steps += 1
+            reason = self._emit(r, nxt, events)
+            self.block_mgr.commit(
+                r.rid, r.prompt_total + len(r.generated) - 1)
+            self._extend(r, nxt)
+            if reason is not None:
+                self._finish(r, reason)
         return StepOutput(self.steps, tuple(events),
                           tuple(r.rid for r in self.finished[n_done:]),
                           len(self.active()), sched.num_queued(),
@@ -479,7 +650,8 @@ class Engine:
                      self.block_mgr.block_size, paged=self.paged,
                      prefix_cache=self.prefix_cache,
                      prefill_chunk=self.prefill_chunk,
-                     policy=self.scheduler.policy)
+                     policy=self.scheduler.policy,
+                     kv_dtype=self.kv_dtype, fused=self.fused)
         stage_caches = [w.cache for w in self.runner.workers]
         if self.paged:
             self.block_mgr.drop_unreferenced_cache()
@@ -521,7 +693,9 @@ class Engine:
                                  prefix_cache=self.prefix_cache,
                                  prefill_chunk=self.prefill_chunk,
                                  policy=self.scheduler.policy,
-                                 kv_tier=self.kv_tier))
+                                 kv_tier=self.kv_tier,
+                                 kv_dtype=self.kv_dtype,
+                                 fused=self.fused))
         return [first] + others
 
     def retire(self):

@@ -34,18 +34,22 @@ from repro.serving.worker import StageWorker
 class ModelRunner:
     def __init__(self, cfg: ModelConfig, stage_params: Sequence[dict],
                  max_batch: int, max_seq: int, *, paged: bool,
-                 n_blocks: int, block_size: int):
+                 n_blocks: int, block_size: int, kv_dtype=None):
         self.cfg = cfg
         self.paged = paged
         self.max_batch = max_batch
+        self.kv_dtype = kv_dtype
+        self._attn_only = (all(m == "attn" for m in cfg.mixer_pattern)
+                           and not cfg.is_encdec)
         # one extra trash page: idle slots' block-table rows point here so
-        # their (unused) decode writes never land in a live page
+        # their (unused) decode writes never land in a live page; the
+        # ragged path also routes pad-token writes to it
         self._null_page = n_blocks
         self._table_width = max_seq // block_size + 1
         n = len(stage_params)
         self.workers = [StageWorker(cfg, p, n, i, max_batch, max_seq,
                                     paged=paged, n_pages=n_blocks + 1,
-                                    page_size=block_size)
+                                    page_size=block_size, kv_dtype=kv_dtype)
                         for i, p in enumerate(stage_params)]
         self._bt = np.full((max_batch, self._table_width), self._null_page,
                            np.int32)
@@ -99,6 +103,13 @@ class ModelRunner:
         chain, writing KV through the slot's block-table row (paged) or
         the slot's contiguous strip. Returns the pipeline output — the
         last stage's logits at the final row."""
+        if self.paged and self._attn_only and prefix_embeds is None:
+            # satellite path: run the chunk as a one-segment ragged batch.
+            # History length is *dynamic* there (per-token positions drive
+            # the mask), so compiles are bounded by the power-of-two token
+            # buckets instead of one executable per (chunk_len, hist_len).
+            h = self.forward_batch([(slot, list(tokens), start)])
+            return h[0][None, None]
         prefix = None
         if prefix_embeds is not None:
             prefix = jnp.asarray(prefix_embeds)[None]
@@ -139,6 +150,54 @@ class ModelRunner:
             h = w.decode(h, pos, block_tables=bt)
         return h
 
+    _TILE_Q = 8     # ragged span alignment (kernels/ragged_attention.py)
+
+    def forward_batch(self, segments: Sequence):
+        """ONE fused launch over a mixed ragged batch. ``segments`` is a
+        list of (slot, tokens, pos0) — prefill chunks (len > 1, pos0 =
+        rows already in the pool) and decode rows (len 1) freely mixed,
+        at most one segment per slot. Tokens are flattened into a single
+        ragged axis; each segment's span is tile-aligned (pad tokens get
+        pos = -1 → masked, writes routed to the trash page) and the total
+        is bucketed to a power of two so the jit cache stays O(log
+        max_tokens). Returns (max_batch, V) logits — row i is segment
+        i's last real token's logits."""
+        assert self.paged and self._attn_only
+        assert 0 < len(segments) <= self.max_batch
+        tq = self._TILE_Q
+        toks: List[int] = []
+        poss: List[int] = []
+        rows: List[int] = []
+        out_idx = [0] * self.max_batch
+        for i, (slot, tokens, pos0) in enumerate(segments):
+            n = len(tokens)
+            na = -(-n // tq) * tq
+            out_idx[i] = len(toks) + n - 1
+            toks.extend(int(t) for t in tokens)
+            toks.extend([0] * (na - n))
+            poss.extend(range(pos0, pos0 + n))
+            poss.extend([-1] * (na - n))
+            # pad rows inside a segment's aligned span keep its slot so
+            # `row` stays constant per tile (the kernel's layout contract)
+            rows.extend([slot] * na)
+        t = len(toks)
+        tb = tq
+        while tb < t:
+            tb *= 2
+        toks.extend([0] * (tb - t))
+        poss.extend([-1] * (tb - t))
+        rows.extend([0] * (tb - t))
+        x = jnp.asarray([toks], jnp.int32)
+        pos = jnp.asarray([poss], jnp.int32)
+        row = jnp.asarray(rows, jnp.int32)
+        valid = jnp.asarray([p >= 0 for p in poss])
+        oi = jnp.asarray(out_idx, jnp.int32)
+        bt = self._tables()
+        h = x
+        for w in self.workers:
+            h = w.forward_ragged(h, pos, row, valid, bt, oi)
+        return h[0]
+
     # -------------------------------------------------------- maintenance
     def copy_pages(self, src: int, dst: int):
         """Apply a prefix-cache copy-on-write to every stage's pools."""
@@ -151,29 +210,37 @@ class ModelRunner:
         page arrays are concatenated over the stages along the period
         axis — a payload read from a 2-stage engine writes back into its
         consolidated 1-stage successor (or any same-model replica)
-        unchanged."""
+        unchanged. Quantized pools append a 4th element per entry: a dict
+        of the scale/zero leaves, concatenated the same way."""
         out = []
         for name, sub in self.workers[0].cache.items():
             if "k_pages" not in sub:
                 continue
-            ks, vs = [], []
-            for w in self.workers:
-                k, v = w.read_page(name, blk)
-                ks.append(k)
-                vs.append(v)
-            out.append((name, np.concatenate(ks, axis=0),
-                        np.concatenate(vs, axis=0)))
+            parts = [w.read_page(name, blk) for w in self.workers]
+            k = np.concatenate([p["k_pages"] for p in parts], axis=0)
+            v = np.concatenate([p["v_pages"] for p in parts], axis=0)
+            extra = [l for l in parts[0] if l not in ("k_pages", "v_pages")]
+            if extra:
+                aux = {l: np.concatenate([p[l] for p in parts], axis=0)
+                       for l in extra}
+                out.append((name, k, v, aux))
+            else:
+                out.append((name, k, v))
         return out
 
     def write_pages(self, blk: int, payload):
         """Scatter a spilled block's payload (see ``read_pages``) back
         into the stage pools, splitting the period axis by each stage's
         share."""
-        for name, k, v in payload:
+        for entry in payload:
+            name, k, v = entry[0], entry[1], entry[2]
+            aux = entry[3] if len(entry) > 3 else {}
             off = 0
             for w in self.workers:
                 p = w.cache[name]["k_pages"].shape[0]
-                w.write_page(name, blk, k[off:off + p], v[off:off + p])
+                extras = {l: a[off:off + p] for l, a in aux.items()} or None
+                w.write_page(name, blk, k[off:off + p], v[off:off + p],
+                             extras=extras)
                 off += p
             assert off == k.shape[0], \
                 f"payload periods {k.shape[0]} != pipeline periods {off}"

@@ -30,9 +30,11 @@ class StageWorker:
     def __init__(self, cfg: ModelConfig, stage_params: dict, n_stages: int,
                  stage: int, max_batch: int, max_seq: int,
                  paged: bool = False, n_pages: Optional[int] = None,
-                 page_size: Optional[int] = None):
+                 page_size: Optional[int] = None, kv_dtype=None):
         assert not cfg.is_encdec or n_stages == 1, \
             "enc-dec serves single-worker (DESIGN.md §5)"
+        assert kv_dtype is None or paged, \
+            "kv_dtype override requires the paged layout"
         self.cfg = cfg
         self.model = Model(cfg)
         self.n_stages = n_stages
@@ -47,14 +49,16 @@ class StageWorker:
         self.paged = paged
         self.n_pages = n_pages
         self.page_size = page_size
+        self.kv_dtype = kv_dtype
         dt = jnp.dtype(cfg.dtype)
         self.cache = transformer.init_cache(
             cfg, max_batch, max_seq, dt, n_periods=p1 - p0, paged=paged,
-            n_pages=n_pages, page_size=page_size)
+            n_pages=n_pages, page_size=page_size, kv_dtype=kv_dtype)
         self._prefill_fn = jax.jit(self._prefill_impl,
                                    static_argnames=("with_prefix",
                                                     "hist_len"))
         self._decode_fn = jax.jit(self._decode_impl)
+        self._ragged_fn = jax.jit(self._ragged_impl)
 
     # ----------------------------------------------------------- impl fns
     def _prefill_impl(self, params, x_in, positions, fresh_cache,
@@ -88,7 +92,43 @@ class StageWorker:
         out = transformer.head(cfg, params, x) if self.last else x
         return out, new_cache
 
+    def _ragged_impl(self, params, x_in, positions, row, valid, tables,
+                     out_idx, cache):
+        cfg = self.cfg
+        if self.first:
+            # clamp pad positions (-1) for the embed only (learned pos
+            # tables index with them); attention masks on the raw values
+            x = transformer.embed(cfg, params, x_in,
+                                  jnp.maximum(positions, 0),
+                                  dtype=jnp.dtype(cfg.dtype))
+        else:
+            x = x_in
+        x, new_cache, _ = transformer.run_blocks(
+            cfg, params["blocks"], x, positions, cache=cache,
+            ragged=(tables, row, valid))
+        if self.last:
+            # gather each segment's last real token before the head —
+            # only those rows need logits
+            sel = jnp.take(x[0], out_idx, axis=0)[None]
+            out = transformer.head(cfg, params, sel)
+        else:
+            out = x
+        return out, new_cache
+
     # ------------------------------------------------------------ public
+    def forward_ragged(self, x_in, positions, row, valid, tables, out_idx):
+        """One fused launch over a ragged mixed batch. First stage takes
+        tokens (1, T); later stages take hidden states (1, T, d).
+        ``positions/row/valid`` (T,) are the per-token descriptors
+        (attention.self_attention ragged contract), ``tables`` the full
+        block-table matrix, ``out_idx`` (n_out,) the flat index of each
+        segment's last real token. Last stage returns logits
+        (1, n_out, V); others the full hidden (1, T, d)."""
+        out, self.cache = self._ragged_fn(self.params, x_in, positions,
+                                          row, valid, tables, out_idx,
+                                          self.cache)
+        return out
+
     def prefill_slot(self, x_in, slot: int, positions, prefix_embeds=None,
                      block_tables=None, hist_len: int = 0):
         """Prefill one request (batch 1 inputs) into cache slot `slot`.
@@ -163,23 +203,28 @@ class StageWorker:
                       for name, sub in self.cache.items()}
 
     def read_page(self, name: str, blk: int):
-        """Host copies of one attention pool's page ``blk``: (k, v) numpy
-        arrays of shape (P_stage, page_size, Hkv, hd). Used by the KV
-        spill hook at eviction time, while the page content is intact."""
+        """Host copies of one attention pool's page ``blk``, every leaf:
+        {"k_pages": (P_stage, page_size, Hkv, hd), "v_pages": ..., plus
+        scale/zero leaves (P_stage, page_size, Hkv) for int8 pools}. Used
+        by the KV spill hook at eviction time, while the page content is
+        intact."""
         sub = self.cache[name]
-        return (np.asarray(sub["k_pages"][:, blk]),
-                np.asarray(sub["v_pages"][:, blk]))
+        return {leaf: np.asarray(arr[:, blk]) for leaf, arr in sub.items()}
 
-    def write_page(self, name: str, blk: int, k, v):
-        """Write one page's K/V back into an attention pool — the restore
-        half of the HBM → host KV spill (router/kvtier.py)."""
-        sub = self.cache[name]
-        self.cache[name] = {
-            "k_pages": sub["k_pages"].at[:, blk].set(
-                jnp.asarray(k, sub["k_pages"].dtype)),
-            "v_pages": sub["v_pages"].at[:, blk].set(
-                jnp.asarray(v, sub["v_pages"].dtype)),
-        }
+    def write_page(self, name: str, blk: int, k, v, extras=None):
+        """Write one page's K/V (and, for int8 pools, the scale/zero
+        ``extras`` dict) back into an attention pool — the restore half of
+        the HBM → host KV spill (router/kvtier.py). Preserves every other
+        pool leaf."""
+        sub = dict(self.cache[name])
+        sub["k_pages"] = sub["k_pages"].at[:, blk].set(
+            jnp.asarray(k, sub["k_pages"].dtype))
+        sub["v_pages"] = sub["v_pages"].at[:, blk].set(
+            jnp.asarray(v, sub["v_pages"].dtype))
+        for leaf, arr in (extras or {}).items():
+            sub[leaf] = sub[leaf].at[:, blk].set(
+                jnp.asarray(arr, sub[leaf].dtype))
+        self.cache[name] = sub
 
     def retire(self):
         """Drop the cache and params so a retired engine's stale worker

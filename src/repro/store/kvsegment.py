@@ -37,9 +37,9 @@ class KVSegmentStore:
 
     def __init__(self, bandwidth: float = REMOTE_BW):
         self.bandwidth = float(bandwidth)
-        # hash -> list of (name, (k bytes, v bytes), dtype str, shape)
-        self._segs: Dict[bytes, List[Tuple[str, Tuple[bytes, bytes],
-                                           str, Tuple[int, ...]]]] = {}
+        # hash -> list of (name, (k bytes, v bytes), dtype str, shape,
+        # aux) where aux is None or serialized quant leaves
+        self._segs: Dict[bytes, List[Tuple]] = {}
         self._nbytes: Dict[bytes, int] = {}
 
     # --------------------------------------------------------------- api
@@ -56,29 +56,43 @@ class KVSegmentStore:
     def bytes_of(self, h: bytes) -> int:
         return self._nbytes[h]
 
-    def put(self, h: bytes, payload: List[Tuple[str, np.ndarray,
-                                                np.ndarray]]):
+    def put(self, h: bytes, payload: List[Tuple]):
         seg = []
         nbytes = 0
-        for name, k, v in payload:
+        for entry in payload:
+            name, k, v = entry[0], entry[1], entry[2]
             k = np.ascontiguousarray(k)
             v = np.ascontiguousarray(v)
             assert k.shape == v.shape and k.dtype == v.dtype
+            aux = None
+            if len(entry) > 3:
+                # quantized pools: serialize the scale/zero leaves too —
+                # they are part of the block's content and its byte count
+                aux = []
+                for leaf, a in entry[3].items():
+                    a = np.ascontiguousarray(a)
+                    aux.append((leaf, a.tobytes(), str(a.dtype), a.shape))
+                    nbytes += a.nbytes
             seg.append((name, (k.tobytes(), v.tobytes()),
-                        str(k.dtype), k.shape))
+                        str(k.dtype), k.shape, aux))
             nbytes += k.nbytes + v.nbytes
         self._segs[h] = seg
         self._nbytes[h] = nbytes
 
-    def get(self, h: bytes) -> List[Tuple[str, np.ndarray, np.ndarray]]:
+    def get(self, h: bytes) -> List[Tuple]:
         out = []
-        for name, (kb, vb), dtype, shape in self._segs[h]:
+        for name, (kb, vb), dtype, shape, aux in self._segs[h]:
             k = np.frombuffer(kb, dtype=dtype).reshape(shape)
             v = np.frombuffer(vb, dtype=dtype).reshape(shape)
-            out.append((name, k, v))
+            if aux is None:
+                out.append((name, k, v))
+            else:
+                d = {leaf: np.frombuffer(ab, dtype=adt).reshape(ashp)
+                     for leaf, ab, adt, ashp in aux}
+                out.append((name, k, v, d))
         return out
 
-    def pop(self, h: bytes) -> List[Tuple[str, np.ndarray, np.ndarray]]:
+    def pop(self, h: bytes) -> List[Tuple]:
         out = self.get(h)
         del self._segs[h]
         del self._nbytes[h]

@@ -1,0 +1,187 @@
+"""Fused ragged-batch engine step + int8 quantized KV pages.
+
+Covers the tentpole contract: a fused engine serves every step with (at
+most) two ragged launches and its greedy token streams are bit-exact
+with the legacy paged step at full-precision KV; int8 pools decode
+deterministically and every byte account (BlockManager quotes, KV-tier
+spill/restore flows, consolidation migration) matches the analytic
+``paged_kv_token_bytes`` figure exactly. Also pins the bounded-recompile
+satellite: chunked prefill no longer compiles one executable per
+(chunk_len, hist_len) pair — paged attention-only prefills ride the
+ragged path, whose shapes are bucketed to powers of two."""
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import smoke
+from repro.models.attention import paged_kv_token_bytes
+from repro.models.model import build_model
+from repro.router import KVBlockStore
+from repro.serving.api import SamplingParams
+from repro.serving.engine import Engine
+
+PROMPTS = [
+    [1, 2, 3, 4, 5, 6, 7],
+    [9, 8, 7, 6, 5],
+    [3, 1, 4, 1, 5, 9, 2, 6, 5, 3],
+    [11, 12, 13],
+]
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = smoke("granite-3-8b")
+    return cfg, build_model(cfg).init(jax.random.PRNGKey(0))
+
+
+def _run(cfg, params, n_stages=1, max_new=6, **kw):
+    if n_stages == 1:
+        sp = [params]
+    else:
+        m = build_model(cfg)
+        sp = [m.slice_stage_params(params, n_stages, i)
+              for i in range(n_stages)]
+    eng = Engine(cfg, sp, max_batch=3, max_seq=64, block_size=8,
+                 paged=True, **kw)
+    reqs = [eng.submit(p, SamplingParams(max_new=max_new)) for p in PROMPTS]
+    eng.run()
+    return [list(r.generated) for r in reqs], eng
+
+
+def test_fused_matches_legacy_paged(granite):
+    cfg, params = granite
+    legacy, _ = _run(cfg, params)
+    fused, eng = _run(cfg, params, fused=True)
+    assert fused == legacy
+    # the fused engine never touched the legacy per-request forwards
+    w = eng.workers[0]
+    assert w._prefill_fn._cache_size() == 0
+    assert w._decode_fn._cache_size() == 0
+
+
+def test_fused_matches_legacy_chunked_prefix(granite):
+    cfg, params = granite
+    legacy, _ = _run(cfg, params)
+    fused, _ = _run(cfg, params, fused=True, prefill_chunk=4,
+                    prefix_cache=True)
+    assert fused == legacy
+
+
+def test_fused_fp16_kv_bit_exact(granite):
+    """fp16 KV pages: the pool round-trip quantizes K/V to fp16 but at
+    smoke scale greedy streams stay bit-exact with the fp32 pools."""
+    cfg, params = granite
+    legacy, _ = _run(cfg, params)
+    fp16, _ = _run(cfg, params, kv_dtype="float16", fused=True)
+    assert fp16 == legacy
+
+
+def test_int8_engine_deterministic(granite):
+    cfg, params = granite
+    a, eng = _run(cfg, params, kv_dtype="int8", prefill_chunk=4)
+    b, _ = _run(cfg, params, kv_dtype="int8", prefill_chunk=4)
+    assert a == b
+    assert all(len(s) == 6 for s in a)
+    assert eng.fused, "int8 defaults the fused step on"
+    assert eng.block_mgr.bytes_per_token == paged_kv_token_bytes(cfg,
+                                                                 "int8")
+
+
+def test_engine_knob_validation(granite):
+    cfg, params = granite
+    with pytest.raises(ValueError, match="fused"):
+        Engine(cfg, [params], paged=True, kv_dtype="int8", fused=False)
+    with pytest.raises(ValueError, match="paged"):
+        Engine(cfg, [params], paged=False, fused=True)
+    with pytest.raises(ValueError, match="paged"):
+        Engine(cfg, [params], paged=False, kv_dtype="float16")
+    eng = Engine(cfg, [params], paged=True, fused=True)
+    with pytest.raises(ValueError, match="prefix_embeds"):
+        eng.submit([1, 2], SamplingParams(max_new=2),
+                   prefix_embeds=np.zeros((2, cfg.d_model), np.float32))
+
+
+def test_chunked_prefill_compiles_bounded(granite):
+    """The recompile satellite: staggered prompts under chunked prefill
+    hit many distinct (chunk_len, hist_len) pairs, but the ragged path's
+    power-of-two buckets keep the jit cache O(log max_tokens) — and the
+    legacy per-(chunk, hist) prefill executable is never built."""
+    cfg, params = granite
+    eng = Engine(cfg, [params], max_batch=3, max_seq=64, block_size=8,
+                 paged=True, prefill_chunk=4)
+    lens = [7, 5, 10, 3, 9, 6]
+    for i, n in enumerate(lens):
+        eng.submit([20 + i] * n, SamplingParams(max_new=4))
+    eng.run()
+    w = eng.workers[0]
+    assert w._prefill_fn._cache_size() == 0, \
+        "paged attention-only prefill must ride the ragged path"
+    # buckets seen: prefill chunks pad to 8; mixed/decode batches reach
+    # at most 3 slots * tile 8 = 24 -> {8, 16, 32}
+    assert w._ragged_fn._cache_size() <= 4, \
+        f"ragged executables not bounded: {w._ragged_fn._cache_size()}"
+
+
+def _churn(eng, seed, n):
+    """Distinct throwaway prompts that push the LRU cache out."""
+    for i in range(n):
+        q = [(seed + 13 * i + j) % 500 for j in range(24)]
+        eng.submit(q, SamplingParams(max_new=2))
+        eng.run()
+
+
+def test_int8_spill_restore_bytes_exact(granite):
+    """Quantized-KV accounting sweep: every spilled/restored block's
+    measured payload bytes (int8 pages + f32 scale/zero leaves) equal
+    block_size * paged_kv_token_bytes(int8) * n_attn_layers exactly —
+    including blocks demoted through the serialized segment tier."""
+    cfg, params = granite
+    tier = KVBlockStore(host_capacity_blocks=2)
+    eng = Engine(cfg, [params], max_batch=2, max_seq=64, block_size=8,
+                 paged=True, prefix_cache=True, kv_dtype="int8",
+                 kv_tier=tier)
+    first = list(range(1, 17))
+    r0 = eng.submit(first, SamplingParams(max_new=2))
+    eng.run()
+    _churn(eng, seed=50, n=12)                # evict + demote blocks
+    per_block = (eng.block_mgr.block_size
+                 * paged_kv_token_bytes(cfg, "int8")
+                 * eng.n_attn_layers())
+    assert tier.spills > 0 and tier.demotions > 0
+    assert tier.spilled_bytes == tier.spills * per_block
+    for h in list(tier._host):
+        assert tier.bytes_of(h) == per_block
+    # restore through a prefix hit: bytes measured == analytic quote
+    r1 = eng.submit(first, SamplingParams(max_new=2))
+    eng.run()
+    assert tier.restores > 0
+    assert tier.restored_bytes == tier.restores * per_block
+    assert r1.generated == r0.generated       # restored KV is bit-exact
+
+
+def test_int8_consolidation_migration_bytes_exact(granite):
+    """2-stage int8 engine consolidates mid-flight: the measured gather
+    (quantized pages + scale/zero leaves of every non-target stage)
+    equals the BlockManager's analytic migration quote exactly, and the
+    streams continue identical to a 1-stage run."""
+    cfg, params = granite
+    single, _ = _run(cfg, params, kv_dtype="int8", prefill_chunk=4)
+    m = build_model(cfg)
+    sp = [m.slice_stage_params(params, 2, i) for i in range(2)]
+    eng = Engine(cfg, sp, max_batch=3, max_seq=64, block_size=8,
+                 paged=True, kv_dtype="int8", prefill_chunk=4)
+    reqs = [eng.submit(p, SamplingParams(max_new=6)) for p in PROMPTS]
+    for _ in range(4):
+        eng.step()
+    live = [r.rid for r in eng.active()]
+    n_remote = eng.n_attn_layers(migrated_only=True)
+    quoted = eng.block_mgr.migration_bytes(live, n_remote)
+    unique = len(eng.block_mgr.blocks_of(live))
+    per_block = (eng.block_mgr.block_size
+                 * paged_kv_token_bytes(cfg, "int8") * n_remote)
+    assert quoted == unique * per_block > 0
+    eng2 = eng.consolidated(params)
+    assert eng2.last_migration_bytes == quoted
+    eng2.run()
+    assert [list(r.generated) for r in reqs] == single
