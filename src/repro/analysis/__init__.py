@@ -1,0 +1,20 @@
+"""Correctness tooling: KV-lifecycle sanitizer, repo lint, Pallas checks.
+
+Three coordinated checkers over the serving stack's most fragile shared
+contract — the paged-KV block lifecycle — plus the repo-specific static
+rules we keep re-fixing by hand:
+
+  * ``sanitizer``   — a shadow BlockManager mirroring every
+    allocate/extend/commit/free/evict/spill/restore/migrate event
+    (``Engine(sanitize=True)`` / ``REPRO_SANITIZE=1``);
+  * ``lint``        — AST-based repo lint (``python -m repro.analysis.lint``)
+    with a frozen, ratcheting baseline;
+  * ``kernelcheck`` — static pre-launch validation of the Pallas kernel
+    calling conventions (grid/BlockSpec consistency, 8/128 tile
+    alignment, scalar-prefetch shapes, the pad-row convention), run from
+    ``kernels/ops.py`` dispatch in sanitize mode.
+
+Nothing here sits on a hot path unless explicitly enabled: every
+instrumentation point in serving/ is a ``if self.tracer is not None``
+guard around an attribute that defaults to ``None``.
+"""

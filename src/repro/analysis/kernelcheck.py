@@ -1,0 +1,200 @@
+"""Static pre-launch checks for the Pallas attention kernels.
+
+Validates the calling conventions of ``kernels/ragged_attention.py`` and
+``kernels/decode_attention.py`` *before* a launch is traced — rank and
+shape consistency between the operands that become the grid /
+BlockSpecs / scalar-prefetch arguments, the 8-sublane / 128-lane tile
+alignment the TPU layouts require, int8 quant-leaf shapes, and the
+pad-row convention (``pos = -1`` tokens are masked and their writes
+routed to the trash page, so the position operand must be a *signed*
+integer type).
+
+Called from ``kernels/ops.py`` dispatch when sanitize mode is on
+(``REPRO_SANITIZE=1`` / ``ops.set_sanitize_mode(True)``). Because the
+dispatch wrappers execute at jit-trace time, a check runs once per
+compiled shape, not once per step — and on concrete (untraced) inputs it
+additionally validates the *values*: page ids inside the pool, row ids
+inside the batch, positions ≥ -1.
+
+Violations raise :class:`KernelContractError`. Alignment problems that
+only matter on real TPU tiles (head_dim % 128, page_size % 8) are
+errors under the ``pallas`` backend and warnings under
+``interpret``/``ref``, where CPU smoke shapes are legitimately tiny.
+"""
+
+from __future__ import annotations
+
+import warnings
+from typing import Optional
+
+import numpy as np
+
+from repro.models.attention import KV_QUANT_LEAVES
+
+__all__ = ["KernelContractError", "check_ragged_paged",
+           "check_paged_decode"]
+
+LANE = 128     # TPU lane width: last dim of a tile
+SUBLANE = 8    # TPU sublane width: second-to-last dim of a tile
+
+
+class KernelContractError(ValueError):
+    """A kernel operand violates the launch contract."""
+
+
+def _shape(x):
+    return tuple(x.shape)
+
+
+def _is_concrete(x) -> bool:
+    """True when the operand carries real values (not a jit tracer)."""
+    try:
+        import jax
+        return not isinstance(x, jax.core.Tracer)
+    except ImportError:                      # pragma: no cover
+        return True
+
+
+def _err(msg: str):
+    raise KernelContractError(msg)
+
+
+def _align(what: str, value: int, mult: int, backend: str):
+    """8/128 tile alignment: hard error on the compiled pallas backend,
+    warning elsewhere (interpret/ref run un-tiled)."""
+    if value % mult == 0:
+        return
+    msg = (f"{what} = {value} is not a multiple of {mult}: the TPU tile "
+           f"layout would pad or miscompile this launch")
+    if backend == "pallas":
+        _err(msg)
+    warnings.warn(f"kernelcheck: {msg} (backend={backend!r}: tolerated)",
+                  stacklevel=3)
+
+
+def _check_pages(k_pages, v_pages, backend: str):
+    if k_pages.ndim != 4:
+        _err(f"k_pages must be (n_pages, page_size, n_kv_heads, head_dim), "
+             f"got {_shape(k_pages)}")
+    if _shape(k_pages) != _shape(v_pages):
+        _err(f"k_pages {_shape(k_pages)} != v_pages {_shape(v_pages)}")
+    if k_pages.dtype != v_pages.dtype:
+        _err(f"k_pages dtype {k_pages.dtype} != v_pages dtype "
+             f"{v_pages.dtype}")
+    n_pages, page_size, _hkv, hd = k_pages.shape
+    if n_pages < 2:
+        _err(f"n_pages = {n_pages}: the pool must hold at least one real "
+             f"page plus the trailing null/trash page (n_blocks + 1)")
+    _align("page_size", page_size, SUBLANE, backend)
+    _align("head_dim", hd, LANE, backend)
+
+
+def _check_quant(kv_quant, k_pages):
+    if kv_quant is None:
+        return
+    missing = [l for l in KV_QUANT_LEAVES if l not in kv_quant]
+    if missing:
+        _err(f"kv_quant missing leaves {missing}: int8 pools carry "
+             f"{KV_QUANT_LEAVES}")
+    want = _shape(k_pages)[:-1]
+    for leaf in KV_QUANT_LEAVES:
+        a = kv_quant[leaf]
+        if _shape(a) != want:
+            _err(f"kv_quant[{leaf!r}] shape {_shape(a)} != k_pages[:-1] "
+                 f"{want}")
+        if np.dtype(a.dtype) != np.dtype(np.float32):
+            _err(f"kv_quant[{leaf!r}] dtype {a.dtype}: scale/zero leaves "
+                 f"are float32")
+
+
+def check_ragged_paged(q, k_pages, v_pages, tables, row, pos, *,
+                       kv_quant=None, tile_q: int = 8,
+                       backend: str = "ref"):
+    """Contract of ``ragged_attention.ragged_paged_attention``: q (T,
+    Hq, hd) flattened tokens, T tile_q-aligned; ``row``/``pos`` (T,) the
+    per-token scalar-prefetch descriptors (row constant per tile, pos =
+    -1 marks pads); ``tables`` (B, nb) the second scalar-prefetch
+    operand; grid = (T/tile_q, Hkv, nb)."""
+    if q.ndim != 3:
+        _err(f"q must be (T, n_q_heads, head_dim), got {_shape(q)}")
+    t, hq, hd = q.shape
+    _check_pages(k_pages, v_pages, backend)
+    n_pages, page_size, hkv, hd_kv = k_pages.shape
+    if hd_kv != hd:
+        _err(f"q head_dim {hd} != page head_dim {hd_kv}")
+    if hq % hkv != 0:
+        _err(f"n_q_heads {hq} not a multiple of n_kv_heads {hkv} (GQA "
+             f"grouping)")
+    if tile_q % SUBLANE != 0:
+        _err(f"tile_q = {tile_q} must be a multiple of {SUBLANE} "
+             f"(sublane tiling)")
+    if t % tile_q != 0:
+        _err(f"T = {t} tokens not a multiple of tile_q = {tile_q}: the "
+             f"caller pads each segment's span to tile alignment")
+    if tables.ndim != 2:
+        _err(f"tables must be (B, nb), got {_shape(tables)}")
+    for name, a in (("row", row), ("pos", pos)):
+        if a.ndim != 1 or a.shape[0] != t:
+            _err(f"{name} must be ({t},) to match the flattened token "
+                 f"axis, got {_shape(a)}")
+        if not np.issubdtype(np.dtype(a.dtype), np.integer):
+            _err(f"{name} dtype {a.dtype}: scalar-prefetch descriptors "
+                 f"are integer")
+    if not np.issubdtype(np.dtype(pos.dtype), np.signedinteger):
+        _err(f"pos dtype {pos.dtype} cannot carry the pad marker -1 "
+             f"(pad rows → zeros convention needs a signed type)")
+    _check_quant(kv_quant, k_pages)
+    if _is_concrete(tables) and _is_concrete(row) and _is_concrete(pos):
+        tb = np.asarray(tables)
+        if tb.min() < 0 or tb.max() >= n_pages:
+            _err(f"tables reference page ids outside [0, {n_pages}): "
+                 f"range [{tb.min()}, {tb.max()}]")
+        rw = np.asarray(row)
+        if rw.min() < 0 or rw.max() >= tables.shape[0]:
+            _err(f"row references table rows outside "
+                 f"[0, {tables.shape[0]}): range [{rw.min()}, {rw.max()}]")
+        ps = np.asarray(pos)
+        if ps.min() < -1:
+            _err(f"pos carries values below the pad marker -1 "
+                 f"(min {ps.min()})")
+        # row must be constant within each tile_q tile (kernel layout
+        # contract: one table row per query tile)
+        tiles = rw.reshape(-1, tile_q)
+        if not (tiles == tiles[:, :1]).all():
+            bad = int(np.argmax((tiles != tiles[:, :1]).any(axis=1)))
+            _err(f"row changes inside query tile {bad}: segments must be "
+                 f"padded so each tile_q span stays on one table row")
+
+
+def check_paged_decode(q, k_pages, v_pages, block_tables, kv_len, *,
+                       backend: str = "ref"):
+    """Contract of ``decode_attention.paged_decode_attention``: q (B, 1,
+    Hq, hd) one token per sequence; ``block_tables`` (B, nb) page ids;
+    ``kv_len`` (B,) valid rows per sequence."""
+    if q.ndim != 4 or q.shape[1] != 1:
+        _err(f"q must be (B, 1, n_q_heads, head_dim), got {_shape(q)}")
+    b, _one, hq, hd = q.shape
+    _check_pages(k_pages, v_pages, backend)
+    n_pages, page_size, hkv, hd_kv = k_pages.shape
+    if hd_kv != hd:
+        _err(f"q head_dim {hd} != page head_dim {hd_kv}")
+    if hq % hkv != 0:
+        _err(f"n_q_heads {hq} not a multiple of n_kv_heads {hkv} (GQA "
+             f"grouping)")
+    if block_tables.ndim != 2 or block_tables.shape[0] != b:
+        _err(f"block_tables must be ({b}, nb), got {_shape(block_tables)}")
+    if kv_len.ndim != 1 or kv_len.shape[0] != b:
+        _err(f"kv_len must be ({b},), got {_shape(kv_len)}")
+    if not np.issubdtype(np.dtype(block_tables.dtype), np.integer):
+        _err(f"block_tables dtype {block_tables.dtype}: page ids are "
+             f"integer")
+    if _is_concrete(block_tables) and _is_concrete(kv_len):
+        tb = np.asarray(block_tables)
+        if tb.min() < 0 or tb.max() >= n_pages:
+            _err(f"block_tables reference page ids outside [0, {n_pages}): "
+                 f"range [{tb.min()}, {tb.max()}]")
+        kl = np.asarray(kv_len)
+        if kl.min() < 0 or kl.max() > block_tables.shape[1] * page_size:
+            _err(f"kv_len range [{kl.min()}, {kl.max()}] exceeds the "
+                 f"table capacity {block_tables.shape[1]} blocks × "
+                 f"{page_size} rows")

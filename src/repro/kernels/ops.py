@@ -10,6 +10,9 @@ Env knobs (read once, overridable via the setters):
   REPRO_KERNEL_BACKEND = pallas | interpret | ref
   REPRO_DECODE_MODE    = scatter | append | paged
   REPRO_ATTN_MODE      = masked_full | causal_skip
+  REPRO_SANITIZE       = 1 | 0 — correctness tooling (analysis/): the
+                         engine KV-lifecycle sanitizer and the Pallas
+                         launch checker run on the traced kernel calls
 """
 
 from __future__ import annotations
@@ -26,6 +29,8 @@ DECODE_MODES = ("scatter", "append", "paged")
 _BACKEND = None
 _ATTN_MODE = os.environ.get("REPRO_ATTN_MODE", "masked_full")
 _DECODE_MODE = os.environ.get("REPRO_DECODE_MODE", "scatter")
+_SANITIZE = os.environ.get("REPRO_SANITIZE", "0").lower() \
+    not in ("", "0", "off", "false")
 assert _ATTN_MODE in ("masked_full", "causal_skip"), \
     f"REPRO_ATTN_MODE={_ATTN_MODE!r}: want masked_full|causal_skip"
 assert _DECODE_MODE in DECODE_MODES, \
@@ -40,6 +45,15 @@ def set_decode_mode(mode: str):
 
 def decode_mode() -> str:
     return _DECODE_MODE
+
+
+def set_sanitize_mode(on: bool):
+    global _SANITIZE
+    _SANITIZE = bool(on)
+
+
+def sanitize_mode() -> bool:
+    return _SANITIZE
 
 
 def set_attention_mode(mode: str):
@@ -109,6 +123,10 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, kv_len, *,
     """Single-token decode against a paged KV pool. q (B,1,Hq,hd);
     pages (N,bs,Hkv,hd); block_tables (B,nb) page ids; kv_len (B,)."""
     be = backend()
+    if _SANITIZE:
+        from repro.analysis import kernelcheck
+        kernelcheck.check_paged_decode(q, k_pages, v_pages, block_tables,
+                                       kv_len, backend=be)
     if be in ("pallas", "interpret"):
         from repro.kernels import decode_attention as _da
         return _da.paged_decode_attention(
@@ -128,6 +146,11 @@ def ragged_paged_attention(q, k_pages, v_pages, tables, row, pos, *,
     carries int8 pools' scale/zero leaves (dequant fused into the K/V
     loads)."""
     be = backend()
+    if _SANITIZE:
+        from repro.analysis import kernelcheck
+        kernelcheck.check_ragged_paged(q, k_pages, v_pages, tables, row,
+                                       pos, kv_quant=kv_quant,
+                                       tile_q=tile_q, backend=be)
     if be in ("pallas", "interpret"):
         from repro.kernels import ragged_attention as _ra
         return _ra.ragged_paged_attention(

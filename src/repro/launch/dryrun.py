@@ -140,7 +140,11 @@ def main():
                 continue
             try:
                 rec = run_cell(arch, shape, args.multi_pod, args.policy)
-            except Exception as e:  # noqa: BLE001
+            except (ValueError, TypeError, KeyError, NotImplementedError,
+                    RuntimeError, MemoryError, OSError) as e:
+                # a cell that fails to lower/compile is recorded and the
+                # sweep continues; anything else (KeyboardInterrupt,
+                # SystemExit, real bugs like NameError) propagates
                 traceback.print_exc()
                 rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
                        "policy": args.policy, "ok": False, "error": str(e)}

@@ -100,6 +100,8 @@ class KVBlockStore:
         self.restored_bytes = 0
         self.restore_flows: List[FetchFlow] = []
         self._fid = 0
+        # correctness tracer (analysis/sanitizer.py); None in production
+        self.tracer = None
 
     # ------------------------------------------------------------ queries
     def has(self, h: bytes) -> bool:
@@ -134,6 +136,8 @@ class KVBlockStore:
         the host LRU to the segment store when over budget). Re-spilling
         a hash refreshes its recency; content is identical by
         construction (same chain hash = same computed KV)."""
+        if self.tracer is not None:
+            self.tracer.on_spill(h, payload)
         if h in self._host:
             self._host.move_to_end(h)
             return
@@ -178,6 +182,8 @@ class KVBlockStore:
         self.restores += 1
         self.restored_bytes += nbytes
         self.restore_flows.append(flow)
+        if self.tracer is not None:
+            self.tracer.on_restore_take(h, payload, nbytes)
         return payload, flow
 
     def drop(self, h: bytes):

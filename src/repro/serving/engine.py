@@ -80,7 +80,7 @@ from repro.models.attention import paged_kv_token_bytes
 from repro.models.model import Model
 from repro.serving.api import (FinishReason, SamplingParams, StepOutput,
                                TokenEvent, sample_token)
-from repro.serving.kvcache import BlockManager
+from repro.serving.kvcache import BlockManager, KVInvariantError
 from repro.serving.migration import (gather_stage_caches,
                                      gather_stage_caches_with_bytes)
 from repro.serving.runner import ModelRunner
@@ -98,7 +98,8 @@ class Engine:
                  prefill_chunk: Optional[int] = None,
                  policy: Union[str, SchedulingPolicy] = "fcfs",
                  kv_tier=None, kv_dtype=None,
-                 fused: Optional[bool] = None):
+                 fused: Optional[bool] = None,
+                 sanitize: Optional[bool] = None):
         self.cfg = cfg
         self.model = Model(cfg)
         if paged is None:
@@ -172,6 +173,19 @@ class Engine:
                                  "hash")
             self.block_mgr.kv_tier = kv_tier
             self._install_spill_hook()
+        # KV-lifecycle sanitizer (analysis/sanitizer.py). Explicit
+        # sanitize=True demands the paged layout; env-driven enabling
+        # (REPRO_SANITIZE=1) silently no-ops on non-paged engines so one
+        # env var can cover a whole mixed test matrix.
+        self.sanitizer = None
+        if sanitize is None:
+            sanitize = ops.sanitize_mode() and paged
+        elif sanitize and not paged:
+            raise ValueError("sanitize=True needs the paged KV layout "
+                             "(Engine(paged=True))")
+        if sanitize:
+            from repro.analysis.sanitizer import KVSanitizer
+            self.sanitizer = KVSanitizer.install(self)
 
     # -------------------------------------------------- multi-tier KV
     def _install_spill_hook(self):
@@ -203,7 +217,9 @@ class Engine:
         pending = self.block_mgr.drain_restores()
         if not pending:
             return
-        assert self.kv_tier is not None
+        if self.kv_tier is None:
+            raise KVInvariantError(
+                "restores pending but no kv_tier attached")
         seconds = 0.0
         for h, dst in pending:
             payload, flow = self.kv_tier.take(h)
@@ -345,7 +361,11 @@ class Engine:
         restarts from the last emitted token."""
         req = pa.req
         if req.prefix_embeds is not None:
-            assert pa.start == 0 and pa.n == req.prompt_total
+            if pa.start != 0 or pa.n != req.prompt_total:
+                raise KVInvariantError(
+                    "prefix_embeds prefill must cover the whole prompt in "
+                    f"one chunk (got [{pa.start}, {pa.start + pa.n}) of "
+                    f"{req.prompt_total})")
             tok = req.prompt
         else:
             tok = req.chain()[pa.start:pa.start + pa.n]
@@ -496,7 +516,11 @@ class Engine:
             self._step_prefill_tokens += pa.n
             if pa.req.rid in chunks:
                 ent = chunks[pa.req.rid]
-                assert ent[2] + len(ent[1]) == pa.start
+                if ent[2] + len(ent[1]) != pa.start:
+                    raise KVInvariantError(
+                        f"non-contiguous fused prefill chunks for request "
+                        f"{pa.req.rid}: have [{ent[2]}, "
+                        f"{ent[2] + len(ent[1])}), next starts {pa.start}")
                 ent[1].extend(tok)
             else:
                 chunks[pa.req.rid] = [pa.req, tok, pa.start]
@@ -651,13 +675,21 @@ class Engine:
                      prefix_cache=self.prefix_cache,
                      prefill_chunk=self.prefill_chunk,
                      policy=self.scheduler.policy,
-                     kv_dtype=self.kv_dtype, fused=self.fused)
+                     kv_dtype=self.kv_dtype, fused=self.fused,
+                     sanitize=False)   # the successor adopts OUR sanitizer
         stage_caches = [w.cache for w in self.runner.workers]
         if self.paged:
             self.block_mgr.drop_unreferenced_cache()
-            live = self.block_mgr.blocks_of(r.rid for r in self.active())
+            live_rids = [r.rid for r in self.active()]
+            live = self.block_mgr.blocks_of(live_rids)
             cache, moved = gather_stage_caches_with_bytes(
-                stage_caches, live_blocks=live, target_stage=0)
+                stage_caches, live_blocks=live, target_stage=0,
+                tracer=self.block_mgr.tracer)
+            if self.sanitizer is not None:
+                self.sanitizer.check_migration(
+                    moved, self.block_mgr.migration_bytes(
+                        live_rids,
+                        self.n_attn_layers(migrated_only=True)))
             self.last_migration_bytes = moved
             eng.last_migration_bytes = moved
         else:
@@ -665,6 +697,12 @@ class Engine:
         eng.runner.workers[0].cache = cache
         eng.block_mgr = self.block_mgr
         eng.scheduler.adopt(self.scheduler, self.block_mgr)
+        if self.sanitizer is not None:
+            # rebind the tracer endpoints (runner / workers; the shared
+            # BlockManager already carries bm.tracer) BEFORE rebuild_rows
+            # so the successor's row writes are observed
+            eng.sanitizer = self.sanitizer
+            self.sanitizer.rebind(eng)
         eng.runner.rebuild_rows(eng.active(), self.block_mgr.tables)
         eng._rid = self._rid
         eng.finished = self.finished
@@ -695,7 +733,8 @@ class Engine:
                                  policy=self.scheduler.policy,
                                  kv_tier=self.kv_tier,
                                  kv_dtype=self.kv_dtype,
-                                 fused=self.fused))
+                                 fused=self.fused,
+                                 sanitize=self.sanitizer is not None))
         return [first] + others
 
     def retire(self):

@@ -67,6 +67,12 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 
+class KVInvariantError(RuntimeError):
+    """A KV-lifecycle invariant was violated (refcount underflow, short
+    token chain, payload/pipeline mismatch, ...). Raised explicitly — not
+    via ``assert`` — so ``python -O`` cannot strip the guard."""
+
+
 def _chain_hash(prev: bytes, block_tokens: Sequence[int]) -> bytes:
     """Hash of a full block's token ids chained onto its prefix's hash."""
     h = hashlib.sha256(prev)
@@ -110,6 +116,10 @@ class BlockManager:
         # needs only .has(hash)); restores queued for the engine to apply
         self.kv_tier = None
         self.pending_restores: List[Tuple[bytes, int]] = []  # (hash, dst)
+        # correctness tracer (analysis/sanitizer.py). None in production —
+        # every call site is guarded, so the sanitize-off path runs the
+        # exact pre-instrumentation code with a single attribute test.
+        self.tracer = None
         # stats
         self.cache_queries = 0
         self.cache_hit_tokens = 0
@@ -159,7 +169,8 @@ class BlockManager:
 
     def _unref_block(self, blk: int):
         self._ref[blk] -= 1
-        assert self._ref[blk] >= 0, f"refcount underflow on block {blk}"
+        if self._ref[blk] < 0:
+            raise KVInvariantError(f"refcount underflow on block {blk}")
         if self._ref[blk] > 0:
             return
         h = self._hash_of.get(blk)
@@ -188,6 +199,10 @@ class BlockManager:
         toward ``cached_tokens`` (``BlockTable.restored_tokens`` says how
         much of that prefix rode the transfer network instead of HBM).
         """
+        tr = self.tracer
+        if tr is not None:
+            n_pr0 = len(self.pending_restores)
+            n_pc0 = len(self.pending_copies)
         t = BlockTable(request_id,
                        tokens=list(tokens) if tokens is not None else None)
         # matched chain prefix: (hash, block-or-None); None = host restore
@@ -195,7 +210,8 @@ class BlockManager:
         n_hbm = 0
         chain = b""
         if self.prefix_cache and tokens is not None:
-            assert len(tokens) >= n_tokens, "token chain shorter than prompt"
+            if len(tokens) < n_tokens:
+                raise KVInvariantError("token chain shorter than prompt")
             self.cache_queries += 1
             h = b""
             for i in range(n_tokens // self.block_size):
@@ -256,6 +272,12 @@ class BlockManager:
         t._chain = chain
         self.cache_hit_tokens += cached
         self.tables[request_id] = t
+        if tr is not None:
+            tr.on_alloc(request_id, list(t.blocks), n_tokens,
+                        shared=[b for _, b in matched if b is not None],
+                        restored=list(self.pending_restores[n_pr0:]),
+                        cow=list(self.pending_copies[n_pc0:]),
+                        cached=cached)
         return t
 
     def drain_copies(self) -> List[Tuple[int, int]]:
@@ -264,6 +286,8 @@ class BlockManager:
         worker pools before the next ``allocate``/``extend`` call (which
         may evict a released source)."""
         out, self.pending_copies = self.pending_copies, []
+        if self.tracer is not None:
+            self.tracer.on_drain_copies(list(out))
         for src, _ in out:
             self._unref_block(src)
         return out
@@ -289,6 +313,10 @@ class BlockManager:
             self._ref[blk] += 1
             t.blocks.append(blk)
         t.length = new_len
+        if self.tracer is not None:
+            self.tracer.on_extend(request_id,
+                                  t.blocks[-need:] if need > 0 else [],
+                                  new_len)
         if t.tokens is not None:
             if token is not None and n_tokens == 1:
                 t.tokens.append(token)
@@ -301,6 +329,8 @@ class BlockManager:
         ``n_valid`` in the prefix index. Engine-driven: called after each
         prefill chunk / decode write, so the index never points at pages
         that have not been computed yet."""
+        if self.tracer is not None:
+            self.tracer.on_commit(request_id, n_valid)
         if not self.prefix_cache:
             return
         t = self.tables.get(request_id)
@@ -321,6 +351,8 @@ class BlockManager:
 
     def free(self, request_id: int):
         t = self.tables.pop(request_id, None)
+        if self.tracer is not None:
+            self.tracer.on_free(request_id, list(t.blocks) if t else None)
         if t:
             for blk in reversed(t.blocks):
                 self._unref_block(blk)
@@ -341,6 +373,9 @@ class BlockManager:
         references released (0 if the request held no table).
         """
         t = self.tables.pop(request_id, None)
+        if self.tracer is not None:
+            self.tracer.on_release(request_id,
+                                   list(t.blocks) if t else None)
         if t is None:
             return 0
         for blk in reversed(t.blocks):

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 def gather_stage_caches_with_bytes(
         stage_caches: List[dict],
         live_blocks: Optional[Sequence[int]] = None,
-        target_stage: int = 0) -> Tuple[dict, int]:
+        target_stage: int = 0, tracer=None) -> Tuple[dict, int]:
     """Concatenate stage cache trees along the leading (period) axis.
 
     Paged attention pools (``k_pages``/``v_pages`` leaves) are gathered at
@@ -56,6 +56,10 @@ def gather_stage_caches_with_bytes(
         else:
             out[name] = jax.tree.map(
                 lambda *xs: jnp.concatenate(xs, axis=0), *sub)
+    if tracer is not None:
+        tracer.on_migration_gather(
+            moved, list(live_blocks) if live_blocks is not None else None,
+            len(stage_caches))
     return out, moved
 
 

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.serving.kvcache import KVInvariantError
 from repro.serving.worker import StageWorker
 
 
@@ -53,6 +54,8 @@ class ModelRunner:
                         for i, p in enumerate(stage_params)]
         self._bt = np.full((max_batch, self._table_width), self._null_page,
                            np.int32)
+        # correctness tracer (analysis/sanitizer.py); None in production
+        self.tracer = None
         self._bt_dev = None             # cached device copy, None = dirty
         # masked decode-view cache: (frozen skip set, device array) — a
         # mixed step with the same half-prefilled slots and unchanged rows
@@ -65,6 +68,8 @@ class ModelRunner:
         whenever extend crosses a block boundary."""
         if not self.paged:
             return
+        if self.tracer is not None:
+            self.tracer.on_set_row(slot, list(blocks))
         row = self._bt[slot]
         row[:] = self._null_page
         row[:len(blocks)] = blocks
@@ -75,6 +80,8 @@ class ModelRunner:
         """Point a vacated slot (finish / preempt) back at the null page."""
         if not self.paged:
             return
+        if self.tracer is not None:
+            self.tracer.on_clear_row(slot)
         self._bt[slot] = self._null_page
         self._bt_dev = None
         self._masked_dev = (None, None)
@@ -87,6 +94,8 @@ class ModelRunner:
         self._bt[:] = self._null_page
         for r in requests:
             blocks = tables[r.rid].blocks
+            if self.tracer is not None:
+                self.tracer.on_set_row(r.slot, list(blocks))
             self._bt[r.slot, :len(blocks)] = blocks
         self._bt_dev = None
         self._masked_dev = (None, None)
@@ -110,6 +119,8 @@ class ModelRunner:
             # buckets instead of one executable per (chunk_len, hist_len).
             h = self.forward_batch([(slot, list(tokens), start)])
             return h[0][None, None]
+        if self.tracer is not None:
+            self.tracer.on_prefill(slot, start, n)
         prefix = None
         if prefix_embeds is not None:
             prefix = jnp.asarray(prefix_embeds)[None]
@@ -128,6 +139,9 @@ class ModelRunner:
         generated token at its next cache position). ``skip_slots`` are
         live-but-not-decoding slots (half-prefilled residents) whose
         table rows are masked to the null page for this forward."""
+        if self.tracer is not None:
+            self.tracer.on_decode([(r.slot, r.pos_next) for r in reqs],
+                                  list(skip_slots))
         tokens = np.zeros((self.max_batch, 1), np.int32)
         positions = np.zeros((self.max_batch, 1), np.int32)
         for r in reqs:
@@ -162,8 +176,15 @@ class ModelRunner:
         is bucketed to a power of two so the jit cache stays O(log
         max_tokens). Returns (max_batch, V) logits — row i is segment
         i's last real token's logits."""
-        assert self.paged and self._attn_only
-        assert 0 < len(segments) <= self.max_batch
+        if not (self.paged and self._attn_only):
+            raise KVInvariantError(
+                "forward_batch requires the paged attention-only layout")
+        if not 0 < len(segments) <= self.max_batch:
+            raise KVInvariantError(
+                f"{len(segments)} segments for max_batch={self.max_batch}")
+        if self.tracer is not None:
+            self.tracer.on_forward_batch(
+                [(s, len(tk), p0) for s, tk, p0 in segments])
         tq = self._TILE_Q
         toks: List[int] = []
         poss: List[int] = []
@@ -242,8 +263,9 @@ class ModelRunner:
                 w.write_page(name, blk, k[off:off + p], v[off:off + p],
                              extras=extras)
                 off += p
-            assert off == k.shape[0], \
-                f"payload periods {k.shape[0]} != pipeline periods {off}"
+            if off != k.shape[0]:
+                raise KVInvariantError(
+                    f"payload periods {k.shape[0]} != pipeline periods {off}")
 
     def clear_slot(self, slot: int):
         """Zero a vacated slot's recurrent state on every stage."""

@@ -31,10 +31,10 @@ class StageWorker:
                  stage: int, max_batch: int, max_seq: int,
                  paged: bool = False, n_pages: Optional[int] = None,
                  page_size: Optional[int] = None, kv_dtype=None):
-        assert not cfg.is_encdec or n_stages == 1, \
-            "enc-dec serves single-worker (DESIGN.md §5)"
-        assert kv_dtype is None or paged, \
-            "kv_dtype override requires the paged layout"
+        if cfg.is_encdec and n_stages != 1:
+            raise ValueError("enc-dec serves single-worker (DESIGN.md §5)")
+        if kv_dtype is not None and not paged:
+            raise ValueError("kv_dtype override requires the paged layout")
         self.cfg = cfg
         self.model = Model(cfg)
         self.n_stages = n_stages
@@ -54,11 +54,15 @@ class StageWorker:
         self.cache = transformer.init_cache(
             cfg, max_batch, max_seq, dt, n_periods=p1 - p0, paged=paged,
             n_pages=n_pages, page_size=page_size, kv_dtype=kv_dtype)
-        self._prefill_fn = jax.jit(self._prefill_impl,
-                                   static_argnames=("with_prefix",
-                                                    "hist_len"))
+        # hist_len static ⇒ one executable per (chunk, hist) pair; bounded
+        # at smoke scale, see prefill_slot docstring
+        self._prefill_fn = jax.jit(  # repro-lint: allow[jit-static-shape]
+            self._prefill_impl,
+            static_argnames=("with_prefix", "hist_len"))
         self._decode_fn = jax.jit(self._decode_impl)
         self._ragged_fn = jax.jit(self._ragged_impl)
+        # correctness tracer (analysis/sanitizer.py); None in production
+        self.tracer = None
 
     # ----------------------------------------------------------- impl fns
     def _prefill_impl(self, params, x_in, positions, fresh_cache,
@@ -143,8 +147,8 @@ class StageWorker:
         (chunk_len, hist_len) pair compiles once — fine at smoke scale
         where chunk shapes recur; a production port would pad chunks to a
         fixed size and mask via kv_len to keep one executable."""
-        assert hist_len == 0 or self.paged, \
-            "chunked prefill requires the paged layout"
+        if hist_len != 0 and not self.paged:
+            raise ValueError("chunked prefill requires the paged layout")
         p0, p1 = self.periods
         dt = jnp.dtype(self.cfg.dtype)
         # in paged mode only the recurrent slots start fresh at batch 1
@@ -194,6 +198,8 @@ class StageWorker:
         pool array; acceptable for the occasional full-prompt hit at
         smoke scale (a production port would batch pending copies into
         one donated scatter)."""
+        if self.tracer is not None:
+            self.tracer.on_copy_pages(src, dst, self.stage)
 
         def cp(a):
             return a.at[:, dst].set(a[:, src])
@@ -208,6 +214,8 @@ class StageWorker:
         scale/zero leaves (P_stage, page_size, Hkv) for int8 pools}. Used
         by the KV spill hook at eviction time, while the page content is
         intact."""
+        if self.tracer is not None:
+            self.tracer.on_page_read(name, blk, self.stage)
         sub = self.cache[name]
         return {leaf: np.asarray(arr[:, blk]) for leaf, arr in sub.items()}
 
@@ -216,6 +224,8 @@ class StageWorker:
         ``extras`` dict) back into an attention pool — the restore half of
         the HBM → host KV spill (router/kvtier.py). Preserves every other
         pool leaf."""
+        if self.tracer is not None:
+            self.tracer.on_page_write(name, blk, self.stage)
         sub = dict(self.cache[name])
         sub["k_pages"] = sub["k_pages"].at[:, blk].set(
             jnp.asarray(k, sub["k_pages"].dtype))

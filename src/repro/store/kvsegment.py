@@ -19,6 +19,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serving.kvcache import KVInvariantError
 from repro.store.store import REMOTE_BW
 
 __all__ = ["KVSegmentStore"]
@@ -63,7 +64,10 @@ class KVSegmentStore:
             name, k, v = entry[0], entry[1], entry[2]
             k = np.ascontiguousarray(k)
             v = np.ascontiguousarray(v)
-            assert k.shape == v.shape and k.dtype == v.dtype
+            if k.shape != v.shape or k.dtype != v.dtype:
+                raise KVInvariantError(
+                    f"segment K/V mismatch: {k.shape}/{k.dtype} vs "
+                    f"{v.shape}/{v.dtype}")
             aux = None
             if len(entry) > 3:
                 # quantized pools: serialize the scale/zero leaves too —

@@ -1,0 +1,167 @@
+"""Pallas launch checker: contract units + ops-dispatch integration.
+
+Well-formed ragged/decode launches pass silently; every contract
+violation (rank, tile alignment, scalar-prefetch shapes/dtypes, the
+signed pad-row convention, quant-leaf shapes, concrete page-id / row /
+pos / kv_len ranges) raises :class:`KernelContractError` with an
+actionable message. Tile-alignment problems are hard errors only under
+the compiled ``pallas`` backend — the CPU ``ref``/``interpret`` paths
+warn, since smoke shapes are legitimately tiny. With sanitize mode on,
+the checks run from the ``kernels/ops.py`` dispatch itself.
+"""
+
+import numpy as np
+import pytest
+
+from repro.analysis.kernelcheck import (KernelContractError,
+                                        check_paged_decode,
+                                        check_ragged_paged)
+from repro.kernels import ops
+
+HD = 128          # lane-aligned head_dim: no alignment warnings
+BS = 8            # sublane-aligned page_size
+
+
+def _pool(n_pages=6, hkv=2, dtype=np.float32):
+    k = np.zeros((n_pages, BS, hkv, HD), dtype)
+    return k, k.copy()
+
+
+def _ragged_args(t=16, hq=4, b=2, nb=4):
+    q = np.zeros((t, hq, HD), np.float32)
+    k, v = _pool()
+    tables = np.zeros((b, nb), np.int32)
+    row = np.repeat(np.arange(t // 8) % b, 8).astype(np.int32)
+    pos = np.where(np.arange(t) % 8 < 5, np.arange(t) % 8, -1)
+    return q, k, v, tables, row, pos.astype(np.int32)
+
+
+def _decode_args(b=2, hq=4, nb=4):
+    q = np.zeros((b, 1, hq, HD), np.float32)
+    k, v = _pool()
+    tables = np.zeros((b, nb), np.int32)
+    kv_len = np.array([9, 17][:b], np.int32)
+    return q, k, v, tables, kv_len
+
+
+def test_good_launches_pass():
+    check_ragged_paged(*_ragged_args())
+    check_paged_decode(*_decode_args())
+
+
+@pytest.mark.parametrize("mutate, match", [
+    (lambda a: (a[0][0], *a[1:]), "q must be"),                 # q rank 2
+    (lambda a: (a[0][:12], *a[1:]), "tile_q"),                  # T % 8 != 0
+    (lambda a: (a[0][:, :3], *a[1:]), "GQA"),                   # Hq % Hkv
+    (lambda a: (a[0][:, :, :64], *a[1:]),
+     "head_dim"),                                               # q hd mismatch
+    (lambda a: (*a[:3], a[3][0], *a[4:]), "tables must be"),
+    (lambda a: (*a[:4], a[4][:8], a[5]), "row must be"),
+    (lambda a: (*a[:4], a[4].astype(np.float32), a[5]), "integer"),
+    (lambda a: (*a[:5], a[5].astype(np.uint32)), "signed"),     # pad -1
+])
+def test_ragged_shape_violations(mutate, match):
+    with pytest.raises(KernelContractError, match=match):
+        check_ragged_paged(*mutate(_ragged_args()))
+
+
+def test_ragged_concrete_value_violations():
+    q, k, v, tables, row, pos = _ragged_args()
+    bad_tables = tables.copy()
+    bad_tables[0, 0] = 99                           # page id out of pool
+    with pytest.raises(KernelContractError, match="page ids outside"):
+        check_ragged_paged(q, k, v, bad_tables, row, pos)
+    bad_row = row.copy()
+    bad_row[3] = 1 - bad_row[3]                     # row flips inside a tile
+    with pytest.raises(KernelContractError, match="inside query tile"):
+        check_ragged_paged(q, k, v, tables, bad_row, pos)
+    bad_pos = pos.copy()
+    bad_pos[0] = -2                                 # below the pad marker
+    with pytest.raises(KernelContractError, match="pad marker"):
+        check_ragged_paged(q, k, v, tables, row, bad_pos)
+
+
+def test_quant_leaf_contract():
+    q, k, v, tables, row, pos = _ragged_args()
+    k8, v8 = k.astype(np.int8), v.astype(np.int8)
+    good = {l: np.zeros(k.shape[:-1], np.float32)
+            for l in ("k_scale", "k_zero", "v_scale", "v_zero")}
+    check_ragged_paged(q, k8, v8, tables, row, pos, kv_quant=good)
+    with pytest.raises(KernelContractError, match="missing leaves"):
+        check_ragged_paged(q, k8, v8, tables, row, pos,
+                           kv_quant={"k_scale": good["k_scale"]})
+    bad = dict(good, k_zero=good["k_zero"][:, :4])
+    with pytest.raises(KernelContractError, match="shape"):
+        check_ragged_paged(q, k8, v8, tables, row, pos, kv_quant=bad)
+    bad = dict(good, v_scale=good["v_scale"].astype(np.float16))
+    with pytest.raises(KernelContractError, match="float32"):
+        check_ragged_paged(q, k8, v8, tables, row, pos, kv_quant=bad)
+
+
+@pytest.mark.parametrize("mutate, match", [
+    (lambda a: (a[0][:, 0], *a[1:]), "q must be"),
+    (lambda a: (a[0], a[1][0], *a[2:]), "k_pages must be"),
+    (lambda a: (a[0], a[1], a[2].astype(np.float16), *a[3:]), "dtype"),
+    (lambda a: (*a[:3], a[3][:1], a[4]), "block_tables must be"),
+    (lambda a: (*a[:4], a[4][:1]), "kv_len must be"),
+])
+def test_decode_shape_violations(mutate, match):
+    with pytest.raises(KernelContractError, match=match):
+        check_paged_decode(*mutate(_decode_args()))
+
+
+def test_decode_concrete_value_violations():
+    q, k, v, tables, kv_len = _decode_args()
+    bad = tables.copy()
+    bad[1, 2] = -1
+    with pytest.raises(KernelContractError, match="page ids outside"):
+        check_paged_decode(q, k, v, bad, kv_len)
+    with pytest.raises(KernelContractError, match="exceeds the"):
+        check_paged_decode(q, k, v, tables,
+                           np.array([9, 999], np.int32))
+
+
+def test_alignment_severity_by_backend():
+    """head_dim % 128 / page_size % 8: error on the compiled pallas
+    backend, warning on ref/interpret where CPU smoke shapes are fine."""
+    q = np.zeros((2, 1, 4, 64), np.float32)
+    k = np.zeros((6, 8, 2, 64), np.float32)
+    tables = np.zeros((2, 4), np.int32)
+    kv_len = np.array([3, 5], np.int32)
+    with pytest.warns(UserWarning, match="not a multiple of 128"):
+        check_paged_decode(q, k, k.copy(), tables, kv_len, backend="ref")
+    with pytest.raises(KernelContractError, match="not a multiple of 128"):
+        check_paged_decode(q, k, k.copy(), tables, kv_len,
+                          backend="pallas")
+
+
+def test_null_page_required():
+    q, k, v, tables, kv_len = _decode_args()
+    solo = k[:1]
+    with pytest.raises(KernelContractError, match="null/trash"):
+        check_paged_decode(q, solo, solo.copy(),
+                           np.zeros((2, 4), np.int32), kv_len)
+
+
+def test_ops_dispatch_runs_checks_in_sanitize_mode():
+    """kernels/ops.py calls the checker before dispatch when sanitize
+    mode is on — a malformed launch dies with the contract error instead
+    of a kernel-side shape blowup (and is not checked when off)."""
+    q, k, v, tables, kv_len = _decode_args()
+    bad_len = np.array([9, 999], np.int32)
+    ops.set_sanitize_mode(True)
+    try:
+        with pytest.raises(KernelContractError, match="exceeds the"):
+            ops.paged_decode_attention(q, k, v, tables, bad_len)
+        qr, kr, vr, tr, row, pos = _ragged_args()
+        with pytest.raises(KernelContractError, match="signed"):
+            ops.ragged_paged_attention(qr, kr, vr, tr, row,
+                                       pos.astype(np.uint32))
+    finally:
+        ops.set_sanitize_mode(False)
+    # off: a well-formed launch reaches the kernel untouched
+    import jax.numpy as jnp
+    out = ops.paged_decode_attention(jnp.asarray(q), jnp.asarray(k),
+                                     jnp.asarray(v), jnp.asarray(tables),
+                                     jnp.asarray(kv_len))
+    assert out.shape == q.shape

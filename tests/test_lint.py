@@ -1,0 +1,155 @@
+"""Repo lint: rule units, suppression, baseline ratchet, clean tree.
+
+Each rule is pinned on synthetic sources (firing AND non-firing
+variants), the ``# repro-lint: allow[...]`` waiver is honored on the
+same and the preceding line, the baseline ratchet fails on new findings
+and reports stale allowances, and — the PR's acceptance bar — the real
+``src/repro`` tree lints clean against the checked-in empty baseline.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.analysis import lint
+from repro.analysis.lint import lint_file, lint_tree
+
+
+def _lint_src(tmp_path, source, relpath="serving/engine.py"):
+    p = tmp_path / os.path.basename(relpath)
+    p.write_text(source)
+    return lint_file(str(p), relpath)
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# rule units
+# ---------------------------------------------------------------------------
+
+
+def test_kv_bytes_formula_fires_once_per_chain(tmp_path):
+    src = "n = 2 * cfg.n_kv_heads * cfg.head_dim * 4 * n_layers\n"
+    fs = _lint_src(tmp_path, src, "roofline/report.py")
+    assert _rules(fs) == ["kv-bytes-formula"]     # one, not per inner node
+
+
+def test_kv_bytes_formula_blessed_sites_exempt(tmp_path):
+    src = "n = 2 * cfg.n_kv_heads * cfg.head_dim * 4\n"
+    assert _lint_src(tmp_path, src, "models/attention.py") == []
+    assert _lint_src(tmp_path, src, "roofline/analytic.py") == []
+
+
+def test_private_blockmanager_outside_home(tmp_path):
+    src = ("x = eng.block_mgr._free.pop()\n"
+           "y = bm._index[h]\n"
+           "z = self._free\n")                    # unrelated self._free: ok
+    fs = _lint_src(tmp_path, src, "serving/engine.py")
+    assert _rules(fs) == ["private-blockmanager"] * 2
+    assert _lint_src(tmp_path, "x = self._free.pop()\n",
+                     "serving/kvcache.py") == []
+
+
+def test_wallclock_and_global_rng_in_sim_scope(tmp_path):
+    src = ("t = time.time()\n"
+           "r = random.random()\n"
+           "g = random.Random(7)\n"               # seeded factory: ok
+           "k = jax.random.PRNGKey(0)\n")         # ok
+    fs = _lint_src(tmp_path, src, "fleet/controller.py")
+    assert _rules(fs) == ["wallclock-in-sim"] * 2
+    # outside the sim scope the same calls are fine
+    assert _lint_src(tmp_path, src, "launch/bench.py") == []
+
+
+def test_runtime_assert_scope(tmp_path):
+    src = "assert x > 0, 'invariant'\n"
+    assert _rules(_lint_src(tmp_path, src, "serving/kvcache.py")) == \
+        ["runtime-assert"]
+    assert _lint_src(tmp_path, src, "roofline/report.py") == []
+
+
+def test_blanket_except_requires_accounting(tmp_path):
+    bad = ("try:\n    f()\nexcept Exception:\n    pass\n")
+    good = ("try:\n    f()\nexcept Exception as e:\n"
+            "    log.warning('boom %s', e)\n")
+    reraise = ("try:\n    f()\nexcept Exception:\n    raise\n")
+    rec = ("try:\n    f()\nexcept Exception as e:\n"
+           "    out = {'error': str(e)}\n")
+    assert _rules(_lint_src(tmp_path, bad)) == ["blanket-except"]
+    assert _lint_src(tmp_path, good) == []
+    assert _lint_src(tmp_path, reraise) == []
+    assert _lint_src(tmp_path, rec) == []
+
+
+def test_jit_static_shape_needs_waiver(tmp_path):
+    bad = "f = jax.jit(step, static_argnums=(1,))\n"
+    waived = ("f = jax.jit(  # repro-lint: allow[jit-static-shape]\n"
+              "    step, static_argnames=('n',))\n")
+    plain = "f = jax.jit(step, donate_argnums=(0,))\n"
+    assert _rules(_lint_src(tmp_path, bad)) == ["jit-static-shape"]
+    assert _lint_src(tmp_path, waived) == []
+    assert _lint_src(tmp_path, plain) == []
+
+
+def test_suppression_same_and_previous_line(tmp_path):
+    same = "assert x  # repro-lint: allow[runtime-assert]\n"
+    prev = ("# repro-lint: allow[runtime-assert]\n"
+            "assert x\n")
+    wrong = "assert x  # repro-lint: allow[blanket-except]\n"
+    assert _lint_src(tmp_path, same, "serving/worker.py") == []
+    assert _lint_src(tmp_path, prev, "serving/worker.py") == []
+    assert _rules(_lint_src(tmp_path, wrong, "serving/worker.py")) == \
+        ["runtime-assert"]
+
+
+# ---------------------------------------------------------------------------
+# baseline ratchet
+# ---------------------------------------------------------------------------
+
+
+def test_baseline_ratchet(tmp_path, capsys):
+    pkg = tmp_path / "pkg"
+    pkg.mkdir()
+    f = pkg / "x.py"
+    f.write_text("try:\n    g()\nexcept Exception:\n    pass\n")
+    base = tmp_path / "base.json"
+
+    # no baseline: the finding fails the run
+    assert lint.main([str(pkg), "--baseline", str(base)]) == 1
+    # freeze, then the same tree passes as baselined
+    assert lint.main([str(pkg), "--baseline", str(base),
+                      "--write-baseline"]) == 0
+    assert json.loads(base.read_text()) == {"x.py::blanket-except": 1}
+    assert lint.main([str(pkg), "--baseline", str(base)]) == 0
+    # a second finding exceeds the allowance
+    f.write_text("try:\n    g()\nexcept Exception:\n    pass\n"
+                 "try:\n    h()\nexcept Exception:\n    pass\n")
+    assert lint.main([str(pkg), "--baseline", str(base)]) == 1
+    # fixing everything reports the stale allowance (ratchet down)
+    f.write_text("x = 1\n")
+    capsys.readouterr()
+    assert lint.main([str(pkg), "--baseline", str(base)]) == 0
+    assert "ratchet down" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# the real tree
+# ---------------------------------------------------------------------------
+
+
+def test_repo_lints_clean_against_empty_baseline():
+    """The acceptance bar: src/repro has zero findings and the
+    checked-in baseline is empty (nothing grandfathered)."""
+    root = os.path.dirname(os.path.dirname(
+        os.path.abspath(lint.__file__)))           # src/repro
+    findings = lint_tree(root)
+    assert findings == [], "\n".join(str(f) for f in findings)
+    with open(lint.default_baseline_path()) as f:
+        assert json.load(f) == {}
+
+
+def test_cli_entry_clean():
+    assert lint.main([]) == 0

@@ -1,0 +1,250 @@
+"""KV-lifecycle sanitizer: fuzz coverage and seeded-bug detection.
+
+Two halves of the tentpole contract:
+
+  * randomized sessions under ``Engine(sanitize=True)`` — fresh prompts,
+    multi-turn continuations, verbatim revisits through a tight KV tier
+    (spill → restore), forced preemption, §6.2 consolidation, and the
+    int8/fp16 ``kv_dtype`` variants — produce ZERO sanitizer findings,
+    pass the quiescence audit, and stream bit-exactly with the same
+    session run sanitize-off (the off path carries no instrumentation:
+    every tracer endpoint stays ``None``);
+  * seeded bugs are DETECTED — the PR 7 evict-before-notify class
+    (an eviction that reuses the block id without firing its hook), an
+    injected double-free, and a read of a freshly-allocated,
+    never-written page each surface as the matching finding kind.
+"""
+
+import random
+
+import jax
+import pytest
+
+from conftest import smoke
+from repro.kernels import ops
+from repro.models.model import build_model
+from repro.router import KVBlockStore
+from repro.serving.api import SamplingParams
+from repro.serving.engine import Engine
+from repro.serving.kvcache import KVInvariantError
+
+PROMPTS = [
+    [1, 2, 3, 4, 5, 6, 7],
+    [9, 8, 7, 6, 5],
+    [3, 1, 4, 1, 5, 9, 2, 6, 5, 3],
+    [11, 12, 13],
+]
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = smoke("granite-3-8b")
+    return cfg, build_model(cfg).init(jax.random.PRNGKey(0))
+
+
+def _engine(cfg, params, *, sanitize, tier=None, **kw):
+    return Engine(cfg, [params], max_batch=2, max_seq=32, block_size=8,
+                  paged=True, prefix_cache=True, kv_tier=tier,
+                  sanitize=sanitize, **kw)
+
+
+def _fuzz_session(cfg, params, *, sanitize, kv_dtype, seed):
+    """One randomized multi-turn session. The RNG only drives prompt
+    construction, so the same seed replays the identical workload with
+    sanitize on or off; the 10-block pool under a tight host tier forces
+    evictions (spills) and revisits of evicted prefixes (restores)."""
+    tier = KVBlockStore(host_capacity_blocks=32)
+    eng = _engine(cfg, params, sanitize=sanitize, tier=tier,
+                  kv_dtype=kv_dtype)
+    rng = random.Random(seed)
+    convs = []
+    streams = []
+    for _ in range(16):
+        roll = rng.random()
+        if convs and roll < 0.30:
+            # multi-turn continuation: prior prompt + its reply + a new
+            # token — a prefix hit whose blocks may need a tier restore
+            base, reply = rng.choice(convs)
+            prompt = (base + reply + [rng.randrange(1, 400)])[:20]
+        elif convs and roll < 0.45:
+            prompt = list(rng.choice(convs)[0])       # verbatim revisit
+        else:
+            # 12-16 tokens: each fresh prompt commits 2+ full blocks so
+            # the 10-block pool churns and the tier sees real spills
+            prompt = [rng.randrange(1, 400)
+                      for _ in range(rng.randrange(12, 17))]
+        toks = [ev.token for ev in
+                eng.generate(prompt, SamplingParams(
+                    max_new=rng.randrange(2, 6)))]
+        convs.append((prompt, toks))
+        streams.append(toks)
+    # revisit the oldest conversations verbatim: their blocks were pushed
+    # out of the 10-block pool long ago, so these are tier restores
+    for base, _ in convs[:3]:
+        streams.append([ev.token for ev in
+                        eng.generate(base, SamplingParams(max_new=4))])
+    # forced preemption mid-decode, then drain
+    a = eng.submit([7] * 12, SamplingParams(max_new=6))
+    b = eng.submit([9] * 12, SamplingParams(max_new=6))
+    for _ in range(3):
+        eng.step()
+    eng.preempt(a)
+    eng.run()
+    streams += [list(a.generated), list(b.generated)]
+    return streams, eng, tier
+
+
+@pytest.mark.parametrize("kv_dtype", ["float32", "float16", "int8"])
+def test_fuzz_clean_and_bit_exact(granite, kv_dtype):
+    """The randomized session audits clean end to end, actually covers
+    the spill/restore and preemption paths, passes the quiescence
+    refcount audit against the real BlockManager, and its streams are
+    bit-identical to the sanitize-off run of the same seed."""
+    cfg, params = granite
+    on, eng, tier = _fuzz_session(cfg, params, sanitize=True,
+                                  kv_dtype=kv_dtype, seed=1234)
+    assert eng.sanitizer is not None
+    assert eng.block_mgr.evictions > 0 and tier.spills > 0, \
+        "fuzz session must exercise eviction -> spill"
+    assert tier.restores > 0, "fuzz session must exercise restore"
+    assert eng.sanitizer.events > 0
+    eng.sanitizer.check_idle()
+    eng.sanitizer.raise_if_findings()
+
+    off, eng_off, _ = _fuzz_session(cfg, params, sanitize=False,
+                                    kv_dtype=kv_dtype, seed=1234)
+    assert off == on
+    assert eng_off.sanitizer is None
+
+
+def test_sanitize_off_leaves_no_instrumentation(granite):
+    """sanitize=False is the exact pre-instrumentation engine: every
+    tracer endpoint stays None and no hooks were appended."""
+    cfg, params = granite
+    tier = KVBlockStore(host_capacity_blocks=4)
+    eng = _engine(cfg, params, sanitize=False, tier=tier)
+    assert eng.sanitizer is None
+    assert eng.block_mgr.tracer is None
+    assert eng.runner.tracer is None
+    assert all(w.tracer is None for w in eng.runner.workers)
+    assert tier.tracer is None
+
+
+def test_env_mode_enables_and_paged_required(granite):
+    """REPRO_SANITIZE (via ops.set_sanitize_mode) turns the sanitizer on
+    by default for paged engines; asking for it on a non-paged engine is
+    a hard configuration error."""
+    cfg, params = granite
+    ops.set_sanitize_mode(True)
+    try:
+        eng = Engine(cfg, [params], max_batch=2, max_seq=32, block_size=8,
+                     paged=True)
+        assert eng.sanitizer is not None
+        legacy = Engine(cfg, [params], max_batch=2, max_seq=32,
+                        paged=False)
+        assert legacy.sanitizer is None    # nothing to shadow
+    finally:
+        ops.set_sanitize_mode(False)
+    with pytest.raises(ValueError, match="paged"):
+        Engine(cfg, [params], paged=False, sanitize=True)
+
+
+def test_consolidation_carries_sanitizer_clean(granite):
+    """§6.2 scale-down mid-flight with a preempted request: the
+    successor adopts the same sanitizer (rebound to its runner/workers),
+    the migration gather is byte-checked against the BlockManager quote,
+    and the full session still audits clean and matches the
+    uninterrupted 1-stage streams."""
+    cfg, params = granite
+    ref = _engine(cfg, params, sanitize=False)
+    want = [ref.submit(p, SamplingParams(max_new=6)) for p in PROMPTS[:2]]
+    ref.run()
+
+    m = build_model(cfg)
+    sp = [m.slice_stage_params(params, 2, i) for i in range(2)]
+    eng = Engine(cfg, sp, max_batch=2, max_seq=32, block_size=8,
+                 paged=True, prefix_cache=True, sanitize=True,
+                 prefill_chunk=4)
+    a = eng.submit(PROMPTS[0], SamplingParams(max_new=6))
+    b = eng.submit(PROMPTS[1], SamplingParams(max_new=6))
+    for _ in range(3):
+        eng.step()
+    eng.preempt(a)
+    san = eng.sanitizer
+    eng2 = eng.consolidated(params)
+    assert eng2.sanitizer is san          # adopted, not re-created
+    assert eng2.block_mgr.tracer is san
+    assert all(w.tracer is san for w in eng2.runner.workers)
+    eng2.run()
+    assert [list(a.generated), list(b.generated)] == \
+        [list(r.generated) for r in want]
+    san.check_idle()
+    san.raise_if_findings()
+
+
+# ---------------------------------------------------------------------------
+# Seeded bugs: each class the sanitizer exists for must be DETECTED
+# ---------------------------------------------------------------------------
+
+
+def _churn(eng, n=8):
+    for i in range(n):
+        eng.submit([10 * i + j + 1 for j in range(16)],
+                   SamplingParams(max_new=8))
+        eng.run()
+
+
+def test_seeded_evict_before_notify_detected(granite):
+    """Re-introduce the PR 7 bug class: an eviction that drops the index
+    entry and reuses the block id WITHOUT firing the evict hook. The
+    sanitizer's shadow index still maps the block when it is handed out
+    again and flags evict-before-notify."""
+    cfg, params = granite
+    eng = _engine(cfg, params, sanitize=True)
+    bm = eng.block_mgr
+
+    def silent_take():                     # the buggy _take_block
+        if bm._free:
+            return bm._free.pop()
+        blk, _ = bm._cached.popitem(last=False)
+        h = bm._hash_of.pop(blk)
+        if bm._index.get(h) == blk:
+            del bm._index[h]               # ...but never notifies
+        bm.evictions += 1
+        return blk
+
+    bm._take_block = silent_take
+    _churn(eng)                            # 8x3 blocks > 10-block pool
+    assert bm.evictions > 0
+    kinds = {f.kind for f in eng.sanitizer.findings}
+    assert "evict-before-notify" in kinds, eng.sanitizer.report()
+
+
+def test_seeded_double_free_detected(granite):
+    """free() of a request whose table was already dropped at finish."""
+    cfg, params = granite
+    eng = _engine(cfg, params, sanitize=True)
+    r = eng.submit(PROMPTS[0], SamplingParams(max_new=3))
+    eng.run()
+    eng.block_mgr.free(r.rid)              # second free: table is gone
+    kinds = {f.kind for f in eng.sanitizer.findings}
+    assert "double-free" in kinds, eng.sanitizer.report()
+
+
+def test_seeded_uncommitted_read_detected(granite):
+    """A page read of a freshly-allocated block whose rows were never
+    prefilled, decoded, restored, or copied."""
+    cfg, params = granite
+    eng = _engine(cfg, params, sanitize=True)
+    t = eng.block_mgr.allocate(999, 8, tokens=list(range(100, 108)))
+    eng.runner.read_pages(t.blocks[0])     # nothing ever wrote this page
+    kinds = {f.kind for f in eng.sanitizer.findings}
+    assert "uncommitted-read" in kinds, eng.sanitizer.report()
+
+
+def test_strict_mode_raises_at_first_finding(granite):
+    cfg, params = granite
+    eng = _engine(cfg, params, sanitize=True)
+    eng.sanitizer.strict = True
+    with pytest.raises(KVInvariantError, match="free-unknown"):
+        eng.block_mgr.free(31337)          # rid that never existed
